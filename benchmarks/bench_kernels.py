@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU — indicative only) vs
+the jnp oracle, plus the derived VMEM working-set per BlockSpec tile."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _t(fn, reps=5):
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main(n: int = 1024, d: int = 128):
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    alive = jnp.ones((n,), bool)
+    D = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    sizes = jnp.ones((n,), jnp.float32)
+
+    print("kernel,us_per_call,derived")
+    t_ref = _t(lambda: ref.ref_pairwise_sq_euclidean(X))
+    print(f"pairwise_jnp,{t_ref:.0f},n={n} d={d}")
+    for bm in (128, 256):
+        t = _t(lambda: ops.pairwise(X, block_m=bm, block_n=bm))
+        vmem = (2 * bm * d + bm * bm) * 4 / 2**20
+        print(f"pairwise_pallas_b{bm},{t:.0f},vmem_tile={vmem:.2f}MiB")
+    t = _t(lambda: ref.ref_masked_argmin(D, alive))
+    print(f"minscan_jnp,{t:.0f},n={n}")
+    t = _t(lambda: ops.masked_argmin(D, alive))
+    print(f"minscan_pallas,{t:.0f},interpret")
+    t = _t(lambda: ops.lw_update("ward", D[0], D[1], 0.5, 2.0, 3.0, sizes,
+                                 alive))
+    print(f"lw_update_pallas,{t:.0f},interpret")
+    print("# NOTE: Pallas numbers are interpret-mode (CPU) — correctness "
+          "surrogate, not TPU perf")
+    return True
+
+
+if __name__ == "__main__":
+    main()

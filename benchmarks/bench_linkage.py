@@ -1,0 +1,43 @@
+"""Per-method timing table (the paper's Table 1 methods, all supported) +
+the beyond-paper rowmin-variant and kernel-backend comparison."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core.lance_williams import lance_williams
+from repro.core.linkage import METHODS
+from repro.kernels.ops import lance_williams_kernelized
+
+
+def _time(fn, reps: int = 3) -> float:
+    fn()  # warm-up/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn().merges)
+    return (time.perf_counter() - t0) / reps
+
+
+def main(n: int = 256):
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, 8)).astype(np.float32)
+    D = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
+    D2 = D ** 2
+    import jax.numpy as jnp
+
+    Dj, D2j = jnp.asarray(D), jnp.asarray(D2)
+    print("method,us_per_call,derived")
+    for m in METHODS:
+        Din = D2j if m in ("centroid", "median", "ward") else Dj
+        t = _time(lambda: lance_williams(Din, m))
+        print(f"lw_serial_{m},{t * 1e6:.0f},n={n}")
+    t = _time(lambda: lance_williams_kernelized(Dj, "complete"))
+    print(f"lw_kernel_complete,{t * 1e6:.0f},interpret-mode")
+    return True
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Paper storage claim: (n²−n)/2 matrix cells split across p units —
+each device stores O(n²/p).  Measured from actual addressable shards."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+_SNIPPET = r"""
+import json
+import numpy as np, jax, jax.numpy as jnp, math
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.distributed import make_cluster_mesh, AXIS
+n, p = {n}, {p}
+mesh = make_cluster_mesh()
+n_pad = math.ceil(n / p) * p
+D = jnp.zeros((n_pad, n_pad), jnp.float32)
+Ds = jax.device_put(D, NamedSharding(mesh, P(AXIS, None)))
+per_dev = sorted({{s.device.id: s.data.nbytes for s in Ds.addressable_shards}}.items())
+print(json.dumps({{"p": p, "bytes_per_device": per_dev[0][1],
+                   "total_bytes": sum(b for _, b in per_dev)}}))
+"""
+
+
+def run(n: int = 1968, procs=(1, 2, 4, 8, 16)):
+    rows = []
+    for p in procs:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
+        env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+        out = subprocess.run([sys.executable, "-c",
+                              _SNIPPET.format(n=n, p=p)],
+                             capture_output=True, text=True, env=env,
+                             timeout=300)
+        if out.returncode != 0:
+            raise RuntimeError(out.stderr[-2000:])
+        rows.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    return rows
+
+
+def main(n: int = 1968, procs=(1, 2, 4, 8, 16)):
+    rows = run(n, procs)
+    base = rows[0]["bytes_per_device"]
+    print("p,bytes_per_device,reduction_vs_serial")
+    for r in rows:
+        print(f"{r['p']},{r['bytes_per_device']},"
+              f"{base / r['bytes_per_device']:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark runner.
+
+Paper artifact → bench mapping:
+  Figure 2 (runtime vs p, n≈1968)     → bench_scaling
+  §5.4 storage claim O(n²/p)           → bench_storage
+  Table 1 (all linkage methods)        → bench_linkage
+  beyond-paper engine (rowmin)         → bench_variants
+  kernel hot-spots                     → bench_kernels
+  (arch × shape) roofline table        → roofline_report (reads dryrun.jsonl)
+
+Default sizes are CI-scale; pass --paper for the paper-scale n=1968 run.
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--paper", action="store_true",
+                    help="paper-scale sizes (n=1968; slower)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_kernels,
+        bench_linkage,
+        bench_scaling,
+        bench_storage,
+        bench_variants,
+        roofline_report,
+    )
+
+    n_scale = 1968 if args.paper else 384
+    jobs = {
+        "storage": lambda: bench_storage.main(n=n_scale, procs=(1, 2, 4, 8)),
+        "linkage": lambda: bench_linkage.main(n=256 if not args.paper else 512),
+        "kernels": lambda: bench_kernels.main(),
+        "variants": lambda: bench_variants.main(
+            n=384 if not args.paper else 1024, p=4),
+        "scaling": lambda: bench_scaling.main(
+            n=n_scale, procs=(1, 2, 4, 8) if not args.paper
+            else (1, 2, 4, 8, 16)),
+        "roofline": roofline_report.main,
+    }
+    failed = []
+    for name, job in jobs.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n===== bench:{name} =====")
+        try:
+            job()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+            print(f"bench:{name},FAILED,{type(e).__name__}: {e}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

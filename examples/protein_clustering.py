@@ -1,0 +1,54 @@
+"""The paper's end-to-end application: cluster candidate protein
+conformations by pairwise RMSD.
+
+Pipeline (paper §1, §5): conformations → parallel RMSD distance matrix
+(born row-sharded across all devices) → distributed Lance-Williams
+complete-linkage → dendrogram → pick any cut level.
+
+    PYTHONPATH=src python examples/protein_clustering.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/protein_clustering.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import ClusterResult, cluster
+from repro.core.distributed import distributed_pairwise, make_cluster_mesh
+from repro.data.synthetic import conformations
+
+N_CONF, ATOMS, K_TRUE = 96, 24, 6
+
+print(f"devices: {len(jax.devices())}")
+confs, truth = conformations(seed=0, n=N_CONF, atoms=ATOMS, k=K_TRUE,
+                             noise=0.08)
+print(f"{N_CONF} conformations × {ATOMS} atoms "
+      f"(each randomly rotated+translated — only RMSD sees the folds)")
+
+# --- phase 1: parallel RMSD matrix (the paper's parallelized-RMSD step) ----
+mesh = make_cluster_mesh()
+t0 = time.time()
+D = np.asarray(distributed_pairwise(confs, kind="rmsd", mesh=mesh))
+print(f"RMSD matrix build: {time.time() - t0:.2f}s  "
+      f"(sharded over {mesh.devices.size} devices)")
+
+# --- phase 2: distributed Lance-Williams over the same mesh ----------------
+t0 = time.time()
+result = cluster(D, method="complete",
+                 backend="distributed" if mesh.devices.size > 1 else "serial")
+print(f"clustering: {time.time() - t0:.2f}s (backend={result.backend})")
+
+# --- inspect the tree --------------------------------------------------------
+labels = result.labels(K_TRUE)
+purity = sum(np.bincount(truth[labels == c]).max()
+             for c in range(K_TRUE) if (labels == c).any()) / N_CONF
+print(f"purity @ k={K_TRUE}: {purity:.3f}")
+h = result.heights()
+print(f"merge heights: first={h[0]:.3f} last={h[-1]:.3f} "
+      f"(the big jump marks the natural cluster count)")
+gaps = np.diff(h)
+print(f"largest height jump before merge #{int(np.argmax(gaps)) + 1} "
+      f"→ suggests k≈{N_CONF - 1 - int(np.argmax(gaps))}")
+assert purity > 0.9

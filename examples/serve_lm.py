@@ -1,0 +1,18 @@
+"""Serve a zoo model with batched requests (prefill + decode loop).
+
+    PYTHONPATH=src python examples/serve_lm.py
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "chatglm3-6b", "--reduced", "--requests", "8",
+                "--batch", "4", "--prompt-len", "16", "--max-new", "8"] + argv
+    sys.argv = [sys.argv[0]] + argv
+    serve.main()

@@ -1,0 +1,22 @@
+"""Train an LM from the zoo end-to-end (fault-tolerant driver).
+
+Runs the real trainer: sharded steps when >1 device, checkpoints, resume,
+failure injection.  A ~100M-param config is the default at full scale; on
+CPU use --reduced for a few hundred quick steps.
+
+    PYTHONPATH=src python examples/train_lm.py                 # reduced
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/train_lm.py --devices 8
+"""
+
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not any(a.startswith("--arch") for a in argv):
+        argv = ["--arch", "gemma3-1b", "--reduced", "--steps", "200",
+                "--batch", "8", "--seq", "128", "--save-every", "50"] + argv
+    sys.argv = [sys.argv[0]] + argv
+    train.main()

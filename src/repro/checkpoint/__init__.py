@@ -1,0 +1,11 @@
+"""repro.checkpoint — atomic sharded checkpoints + elastic remeshing."""
+
+from repro.checkpoint.elastic import reshard_tree, restore_elastic, validate_mesh_for_tree
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = [
+    "CheckpointManager",
+    "reshard_tree",
+    "restore_elastic",
+    "validate_mesh_for_tree",
+]

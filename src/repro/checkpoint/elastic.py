@@ -1,0 +1,69 @@
+"""Elastic scaling: reshard a checkpoint onto a different mesh.
+
+Checkpoints store full (unsharded) host arrays per leaf, so resharding is
+placement-only: restore with the *new* mesh's NamedShardings and the job
+continues on more/fewer chips — the elastic-scaling path for node loss or
+capacity changes.  ``reshard_tree`` also handles live trees (device→device
+via host) for in-job remeshing, and validates divisibility so a bad target
+mesh fails loudly before any state is touched.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def validate_mesh_for_tree(spec_tree, rules, mesh: Mesh) -> list[str]:
+    """Return a list of leaves whose sharded dims don't divide on ``mesh``
+    (empty = mesh is valid for this parameter tree)."""
+    from repro.distributed.sharding import tree_pspecs
+
+    problems = []
+    pspecs = tree_pspecs(spec_tree, rules, mesh)
+    flat_s = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=lambda s: hasattr(s, "axes"))[0]
+    flat_p = jax.tree.flatten(pspecs, is_leaf=lambda p: isinstance(p, P))[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for (path, spec), pspec in zip(flat_s, flat_p):
+        for dim, part in zip(spec.shape, tuple(pspec) + (None,) * 8):
+            if part is None:
+                continue
+            parts = (part,) if isinstance(part, str) else tuple(part)
+            total = int(np.prod([sizes[a] for a in parts]))
+            if dim % total:
+                problems.append(f"{path}: dim {dim} % {total} != 0")
+    return problems
+
+
+def reshard_tree(tree: Any, shardings: Any) -> Any:
+    """Place every leaf according to ``shardings`` (host round-trip)."""
+
+    def one(x, sh):
+        if sh is None:
+            return x
+        host = np.asarray(jax.device_get(x)) if hasattr(x, "shape") else x
+        return jax.device_put(host, sh)
+
+    return jax.tree.map(one, tree, shardings)
+
+
+def restore_elastic(manager, step: int | None, like: Any, rules,
+                    new_mesh: Mesh, spec_tree=None):
+    """Restore a checkpoint onto ``new_mesh`` (any device count whose
+    shardings divide).  ``like`` gives the tree structure/dtypes."""
+    from repro.distributed.sharding import tree_shardings
+
+    if spec_tree is not None:
+        problems = validate_mesh_for_tree(spec_tree, rules, new_mesh)
+        if problems:
+            raise ValueError(
+                "target mesh incompatible with parameter tree:\n  "
+                + "\n  ".join(problems[:10]))
+        shardings = tree_shardings(spec_tree, rules, new_mesh)
+    else:
+        shardings = None
+    return manager.restore(step, like, shardings)

@@ -1,0 +1,14 @@
+"""repro.configs — assigned architectures × shapes registry."""
+
+from repro.configs.base import ModelConfig, get_config, list_archs
+from repro.configs.shapes import SHAPES, all_cells, cell_runnable, input_specs
+
+__all__ = [
+    "ModelConfig",
+    "SHAPES",
+    "all_cells",
+    "cell_runnable",
+    "get_config",
+    "input_specs",
+    "list_archs",
+]

@@ -1,0 +1,110 @@
+"""Assigned input-shape grid + ``input_specs`` (ShapeDtypeStruct stand-ins).
+
+40 cells = 10 archs × 4 shapes.  ``decode_*`` / ``long_*`` lower
+``serve_step`` (one new token against a seq_len-sized cache); ``long_500k``
+runs only for the sub-quadratic archs (DESIGN.md §5) — the pure
+full-attention archs record a documented skip.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+#: archs with a sub-quadratic long-context mechanism (DESIGN.md §5)
+LONG_CONTEXT_OK = {
+    "rwkv6-3b",       # O(1) recurrent state
+    "zamba2-7b",      # SSM states + 13 shared-attn caches
+    "gemma3-1b",      # 5/6 layers local (window 512)
+    "mixtral-8x7b",   # SWA rolling ring (window 4096)
+}
+
+
+def cell_runnable(arch_id: str, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and arch_id not in LONG_CONTEXT_OK:
+        return False, ("skipped: pure full-attention arch has no "
+                       "sub-quadratic long-context mechanism (DESIGN.md §5)")
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str]]:
+    from repro.configs.base import list_archs
+
+    return [(a, s) for a in list_archs() for s in SHAPES]
+
+
+# ---------------------------------------------------------------------------
+# input specs (weak-type-correct, shardable, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def _tok(b: int, s: int) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    For train that's {tokens, labels, (modality extras)}; for prefill the
+    prompt batch; for decode {tokens(b,1)} + the cache tree.
+    """
+    from repro.models import model_api
+
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.compute_dtype)
+    d = cfg.d_model
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            t = cfg.max_target_len
+            return {
+                "audio_feats": jax.ShapeDtypeStruct((b, s, d), dt),
+                "tokens": _tok(b, t),
+                "labels": _tok(b, t),
+            }
+        batch: dict = {"tokens": _tok(b, s), "labels": _tok(b, s)}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, d), dt)
+            batch["mrope_positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        return batch
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {
+                "audio_feats": jax.ShapeDtypeStruct((b, s, d), dt),
+                "tokens": _tok(b, 1),
+            }
+        batch = {"tokens": _tok(b, s)}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, d), dt)
+            batch["mrope_positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+        return batch
+
+    # decode: one new token against a seq_len cache
+    batch = {"tokens": _tok(b, 1)}
+    if cfg.family == "vlm":
+        batch["mrope_positions"] = jax.ShapeDtypeStruct((3, b, 1), jnp.int32)
+    batch["cache"] = model_api.cache_specs(cfg, b, s)
+    return batch

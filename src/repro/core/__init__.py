@@ -1,0 +1,18 @@
+"""repro.core — the paper's contribution: (distributed) Lance-Williams
+hierarchical agglomerative clustering."""
+
+from repro.core.api import ClusterResult, build_distance_matrix, cluster
+from repro.core.lance_williams import LWResult, lance_williams, lance_williams_from_points
+from repro.core.linkage import METHODS, coefficients, update_row
+
+__all__ = [
+    "METHODS",
+    "ClusterResult",
+    "LWResult",
+    "build_distance_matrix",
+    "cluster",
+    "coefficients",
+    "lance_williams",
+    "lance_williams_from_points",
+    "update_row",
+]

@@ -1,0 +1,112 @@
+"""Public clustering API — the framework's first-class entry point.
+
+``cluster(...)`` accepts either raw points (``(n, d)`` embeddings or
+``(n, atoms, 3)`` conformations) or a pre-built ``(n, n)`` distance matrix,
+picks an engine (serial / distributed / Pallas-kernel inner loops) and
+returns a :class:`ClusterResult` with the merge list, a scipy-style linkage
+matrix and a label extractor — the paper's dendrogram, cut at any level.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Literal
+
+import jax
+import numpy as np
+
+from repro.core import dendrogram as dg
+from repro.core.distance import pairwise_euclidean, pairwise_rmsd, pairwise_sq_euclidean
+from repro.core.lance_williams import lance_williams
+from repro.core.linkage import METHODS
+
+Backend = Literal["auto", "serial", "distributed", "kernel"]
+
+
+@dataclass
+class ClusterResult:
+    merges: np.ndarray                 # (n-1, 4) slot-convention merge list
+    method: str
+    backend: str
+    linkage_matrix: np.ndarray = field(init=False)
+
+    def __post_init__(self) -> None:
+        self.linkage_matrix = dg.to_linkage_matrix(self.merges)
+
+    @property
+    def n(self) -> int:
+        return self.merges.shape[0] + 1
+
+    def labels(self, k: int) -> np.ndarray:
+        """Flat labels for ``k`` clusters (cut the dendrogram at level k)."""
+        return dg.cut(self.merges, k)
+
+    def heights(self) -> np.ndarray:
+        return dg.merge_heights(self.merges)
+
+
+def build_distance_matrix(X, metric: str = "euclidean") -> jax.Array:
+    X = np.asarray(X)
+    if metric == "rmsd":
+        if X.ndim != 3 or X.shape[-1] != 3:
+            raise ValueError("rmsd metric expects (n, atoms, 3) conformations")
+        return pairwise_rmsd(X)
+    if X.ndim != 2:
+        raise ValueError(f"expected (n, d) points, got {X.shape}")
+    if metric == "euclidean":
+        return pairwise_euclidean(X)
+    if metric == "sqeuclidean":
+        return pairwise_sq_euclidean(X)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def cluster(
+    data,
+    method: str = "complete",
+    *,
+    metric: str | None = None,
+    backend: Backend = "auto",
+    mesh=None,
+    variant: str = "baseline",
+) -> ClusterResult:
+    """Hierarchically cluster *data* with the Lance-Williams engine.
+
+    data: ``(n, n)`` distance matrix (if square & ``metric is None``), or
+        ``(n, d)`` points / ``(n, atoms, 3)`` conformations with a metric.
+    backend: ``serial`` (single device), ``distributed`` (paper's algorithm
+        over all mesh devices), ``kernel`` (serial loop with Pallas inner
+        ops), or ``auto`` (distributed iff >1 device).
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown linkage method {method!r}")
+
+    arr = np.asarray(data)
+    is_matrix = metric is None and arr.ndim == 2 and arr.shape[0] == arr.shape[1]
+    if is_matrix:
+        D = arr
+    else:
+        if metric is None:
+            metric = (
+                "sqeuclidean" if method in ("centroid", "median", "ward") else "euclidean"
+            )
+        D = build_distance_matrix(arr, metric)
+
+    if backend == "auto":
+        backend = "distributed" if len(jax.devices()) > 1 else "serial"
+
+    if backend == "serial":
+        merges = lance_williams(D, method=method).merges
+    elif backend == "distributed":
+        from repro.core.distributed import distributed_lance_williams
+
+        merges = distributed_lance_williams(
+            D, method=method, mesh=mesh, variant=variant
+        ).merges
+    elif backend == "kernel":
+        from repro.kernels.ops import lance_williams_kernelized
+
+        merges = lance_williams_kernelized(D, method=method).merges
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    return ClusterResult(merges=np.asarray(merges), method=method, backend=backend)

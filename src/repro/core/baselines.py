@@ -1,0 +1,124 @@
+"""Baselines the paper compares against (conceptually): K-means and
+MST-based single linkage.
+
+* :func:`kmeans` — the partitional method the paper positions LW against
+  (its §2/§3 discussion: K-means is cheap but needs a pre-set k and gives
+  no hierarchy).  Lloyd iterations, k-means++ seeding, fully jit'd; batch
+  dimension shards over the mesh data axis when run under pjit.
+
+* :func:`mst_single_linkage` — the specialized single-linkage algorithm the
+  paper points to (Hendrix et al. 2013 / Prim's MST): O(n²) total instead
+  of LW's O(n³).  Its dendrogram must equal LW(single) — a strong
+  cross-validation used by the tests.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distance import pairwise_sq_euclidean
+
+
+class KMeansResult(NamedTuple):
+    centroids: jax.Array  # (k, d)
+    labels: jax.Array     # (n,)
+    inertia: jax.Array    # scalar — sum of squared distances to centroids
+
+
+def _kmeans_pp_init(key: jax.Array, X: jax.Array, k: int) -> jax.Array:
+    """k-means++ seeding (greedy D² sampling)."""
+    n = X.shape[0]
+    first = jax.random.randint(key, (), 0, n)
+    cents = jnp.zeros((k, X.shape[1]), X.dtype).at[0].set(X[first])
+
+    def body(c, carry):
+        cents, key = carry
+        key, sub = jax.random.split(key)
+        d2 = pairwise_sq_euclidean(X, cents)            # (n, k)
+        mask = jnp.arange(k) < c
+        dmin = jnp.min(jnp.where(mask[None, :], d2, jnp.inf), axis=1)
+        probs = dmin / jnp.maximum(dmin.sum(), 1e-12)
+        nxt = jax.random.choice(sub, n, p=probs)
+        return cents.at[c].set(X[nxt]), key
+
+    cents, _ = jax.lax.fori_loop(1, k, body, (cents, key))
+    return cents
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key: jax.Array, X: jax.Array, k: int, iters: int = 50) -> KMeansResult:
+    X = jnp.asarray(X, jnp.float32)
+    cents = _kmeans_pp_init(key, X, k)
+
+    def lloyd(_, cents):
+        d2 = pairwise_sq_euclidean(X, cents)
+        labels = jnp.argmin(d2, axis=1)
+        one_hot = jax.nn.one_hot(labels, k, dtype=X.dtype)        # (n, k)
+        counts = one_hot.sum(0)                                    # (k,)
+        sums = one_hot.T @ X                                       # (k, d)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        return jnp.where((counts > 0)[:, None], new, cents)       # keep empty
+
+    cents = jax.lax.fori_loop(0, iters, lloyd, cents)
+    d2 = pairwise_sq_euclidean(X, cents)
+    labels = jnp.argmin(d2, axis=1)
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    return KMeansResult(cents, labels, inertia)
+
+
+def mst_single_linkage(D: np.ndarray) -> np.ndarray:
+    """Single-linkage merges via Prim's MST (Hendrix-style), O(n²).
+
+    Returns an ``(n-1, 4)`` merge list in the same slot convention as the
+    LW engines: sorting the MST edges by weight and union-finding yields
+    exactly the single-linkage dendrogram.
+    """
+    D = np.asarray(D, dtype=np.float64)
+    n = D.shape[0]
+    D = np.triu(D, 1) if not np.any(np.tril(D, -1)) else D
+    D = 0.5 * (D + D.T)
+
+    # --- Prim's algorithm -------------------------------------------------
+    in_tree = np.zeros(n, bool)
+    best = np.full(n, np.inf)
+    best_src = np.zeros(n, np.int64)
+    in_tree[0] = True
+    best[1:] = D[0, 1:]
+    edges = []  # (w, u, v)
+    for _ in range(n - 1):
+        cand = np.where(~in_tree, best, np.inf)
+        v = int(np.argmin(cand))
+        edges.append((best[v], int(best_src[v]), v))
+        in_tree[v] = True
+        upd = D[v] < best
+        upd &= ~in_tree
+        best[upd] = D[v][upd]
+        best_src[upd] = v
+
+    # --- Kruskal replay: sorted MST edges == single-linkage merges --------
+    edges.sort(key=lambda e: e[0])
+    parent = np.arange(n)
+    rep = np.arange(n)       # slot representative (min original index)
+    sizes = np.ones(n)
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    merges = np.zeros((n - 1, 4))
+    for t, (w, u, v) in enumerate(edges):
+        ru, rv = find(u), find(v)
+        si, sj = rep[ru], rep[rv]
+        i, j = min(si, sj), max(si, sj)
+        parent[rv] = ru
+        sizes[ru] += sizes[rv]
+        rep[ru] = i
+        merges[t] = (i, j, w, sizes[ru])
+    return merges

@@ -1,0 +1,107 @@
+"""Dendrogram utilities: merge list → tree / labels / linkage matrix.
+
+The engines emit a ``(n-1, 4)`` *merge list* in slot convention —
+``(i, j, dist, new_size)`` with ``i < j``, slot ``i`` keeping the union —
+which is exactly the paper's "output the current tree level" step.  This
+module is the host-side post-processing: conversion to a scipy-style
+linkage matrix, flat cluster extraction at any level ``k`` (the paper's
+"look k levels down the tree"), and tree invariant checks used by the
+property tests.  Pure numpy; nothing here is performance-critical.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def to_linkage_matrix(merges: np.ndarray) -> np.ndarray:
+    """Convert slot-convention merges to a scipy-style linkage matrix ``Z``.
+
+    Row ``t`` of ``Z`` is ``(id_a, id_b, dist, size)`` where ids ``< n`` are
+    leaves and id ``n + t`` names the cluster created at step ``t``.
+    """
+    merges = np.asarray(merges)
+    n = merges.shape[0] + 1
+    slot_id = np.arange(n)          # which cluster-id currently sits in a slot
+    Z = np.zeros((n - 1, 4))
+    for t in range(n - 1):
+        i, j, dist, size = merges[t]
+        i, j = int(round(i)), int(round(j))
+        a, b = slot_id[i], slot_id[j]
+        Z[t] = (min(a, b), max(a, b), dist, size)
+        slot_id[i] = n + t
+    return Z
+
+
+def cut(merges: np.ndarray, k: int) -> np.ndarray:
+    """Flat labels for ``k`` clusters — apply the first ``n-k`` merges.
+
+    Labels are contiguous ints in ``[0, k)`` ordered by first appearance.
+    """
+    merges = np.asarray(merges)
+    n = merges.shape[0] + 1
+    if not 1 <= k <= n:
+        raise ValueError(f"k must be in [1, {n}], got {k}")
+    parent = np.arange(n)
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for t in range(n - k):
+        i, j = int(round(merges[t, 0])), int(round(merges[t, 1]))
+        parent[find(j)] = find(i)
+
+    roots = np.array([find(a) for a in range(n)])
+    _, labels = np.unique(roots, return_inverse=True)
+    # re-index by first appearance for determinism
+    order = {}
+    out = np.empty(n, np.int64)
+    for a, lab in enumerate(labels):
+        if lab not in order:
+            order[lab] = len(order)
+        out[a] = order[lab]
+    return out
+
+
+def merge_heights(merges: np.ndarray) -> np.ndarray:
+    return np.asarray(merges)[:, 2]
+
+
+def is_monotone(merges: np.ndarray, atol: float = 1e-5) -> bool:
+    """True iff merge heights are non-decreasing.
+
+    Guaranteed for single/complete/average/weighted/ward (reducible
+    linkages); centroid/median may legally produce inversions.
+    """
+    h = merge_heights(merges)
+    return bool(np.all(np.diff(h) >= -atol * np.maximum(1.0, np.abs(h[:-1]))))
+
+
+def validate_merges(merges: np.ndarray) -> None:
+    """Structural invariants every engine must satisfy (property tests).
+
+    * each step merges two distinct live slots, ``i < j``
+    * slot ``j`` never reappears after being tombstoned
+    * sizes sum correctly (final merge has size ``n``)
+    """
+    merges = np.asarray(merges)
+    n = merges.shape[0] + 1
+    alive = np.ones(n, bool)
+    sizes = np.ones(n)
+    for t in range(n - 1):
+        i, j = int(round(merges[t, 0])), int(round(merges[t, 1]))
+        if not (0 <= i < j < n):
+            raise AssertionError(f"step {t}: bad slot pair ({i}, {j})")
+        if not (alive[i] and alive[j]):
+            raise AssertionError(f"step {t}: merging dead slot ({i}, {j})")
+        sizes[i] += sizes[j]
+        if abs(sizes[i] - merges[t, 3]) > 1e-3:
+            raise AssertionError(
+                f"step {t}: recorded size {merges[t, 3]} != {sizes[i]}"
+            )
+        alive[j] = False
+    if abs(sizes[int(round(merges[-1, 0]))] - n) > 1e-3:
+        raise AssertionError("final cluster does not contain all items")

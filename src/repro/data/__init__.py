@@ -1,0 +1,13 @@
+"""repro.data — deterministic synthetic pipelines (tokens, embeddings,
+conformations)."""
+
+from repro.data.pipeline import PipelineState, TokenPipeline
+from repro.data.synthetic import conformations, gaussian_mixture, token_batch
+
+__all__ = [
+    "PipelineState",
+    "TokenPipeline",
+    "conformations",
+    "gaussian_mixture",
+    "token_batch",
+]

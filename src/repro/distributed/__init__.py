@@ -1,0 +1,21 @@
+"""repro.distributed — sharding rules, collective helpers, fault simulation."""
+
+from repro.distributed.sharding import (
+    AxisRules,
+    abstract_params,
+    logical_constraint,
+    make_rules,
+    sharding_scope,
+    tree_pspecs,
+    tree_shardings,
+)
+
+__all__ = [
+    "AxisRules",
+    "abstract_params",
+    "logical_constraint",
+    "make_rules",
+    "sharding_scope",
+    "tree_pspecs",
+    "tree_shardings",
+]

@@ -1,0 +1,105 @@
+"""Fault-tolerance runtime pieces: failure injection, step deadlines
+(straggler mitigation), and the restartable step-loop driver.
+
+On real pods the failure signal comes from the runtime (missing heartbeat,
+ICI timeout, preemption notice); here those are *simulated* so the
+recovery machinery — resume-from-checkpoint, deadline skip, bounded retry
+— is real code under test, not a story.  ``run_resilient_loop`` is the
+driver ``launch/train.py`` uses.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+class SimulatedFailure(RuntimeError):
+    """Stands in for a node loss / preemption at a given step."""
+
+
+@dataclass
+class FailurePlan:
+    """Deterministic failure injection: fail the first time each listed
+    step is reached (not on the retry — mimicking a replaced node)."""
+
+    fail_at: tuple[int, ...] = ()
+    _fired: set = field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.fail_at and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedFailure(f"injected failure at step {step}")
+
+
+@dataclass
+class StepDeadline:
+    """Straggler watchdog: flags steps exceeding ``factor ×`` the median.
+
+    On TPU pods a straggling host stalls the collective; the standard
+    mitigations are (a) alert + checkpoint-restart without the bad host
+    (elastic), (b) skip noncritical work (e.g. eval) until caught up.
+    This monitor produces the signal; the trainer logs and can trigger an
+    early checkpoint."""
+
+    factor: float = 3.0
+    warmup: int = 5
+    history: list = field(default_factory=list)
+
+    def observe(self, seconds: float) -> bool:
+        self.history.append(seconds)
+        if len(self.history) <= self.warmup:
+            return False
+        med = sorted(self.history[:-1])[len(self.history[:-1]) // 2]
+        return seconds > self.factor * max(med, 1e-6)
+
+
+def run_resilient_loop(
+    *,
+    start_step: int,
+    total_steps: int,
+    step_fn: Callable[[int], dict],
+    save_fn: Callable[[int], None],
+    restore_fn: Callable[[], int],
+    save_every: int = 50,
+    max_restarts: int = 3,
+    failure_plan: FailurePlan | None = None,
+    deadline: StepDeadline | None = None,
+    log: Callable[[str], None] = print,
+) -> int:
+    """Run steps with checkpoint/restart semantics.  Returns final step.
+
+    On failure: restore from the latest committed checkpoint and continue
+    (bounded by ``max_restarts``).  The data pipeline must be part of the
+    checkpointed state for exactness (it is — see PipelineState).
+    """
+    restarts = 0
+    step = start_step
+    while step < total_steps:
+        try:
+            t0 = time.perf_counter()
+            if failure_plan is not None:
+                failure_plan.check(step)
+            metrics = step_fn(step)
+            dt = time.perf_counter() - t0
+            if deadline is not None and deadline.observe(dt):
+                log(f"[fault] step {step}: straggler detected "
+                    f"({dt:.3f}s > {deadline.factor}× median) — "
+                    f"forcing early checkpoint")
+                save_fn(step)
+            if (step + 1) % save_every == 0 or step + 1 == total_steps:
+                save_fn(step + 1)
+            step += 1
+            if metrics and step % 10 == 0:
+                log(f"[train] step {step}: " + ", ".join(
+                    f"{k}={v:.4f}" for k, v in metrics.items()))
+        except SimulatedFailure as e:
+            restarts += 1
+            if restarts > max_restarts:
+                raise RuntimeError(
+                    f"exceeded max_restarts={max_restarts}") from e
+            log(f"[fault] {e} — restarting from latest checkpoint "
+                f"({restarts}/{max_restarts})")
+            step = restore_fn()
+    return step

@@ -1,0 +1,139 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding/alignment (TPU lane multiples), selects interpret mode
+automatically on CPU (the kernels are *targeted* at TPU and *validated*
+in interpret mode here), and provides ``lance_williams_kernelized`` — the
+serial LW engine with both inner loops (min-scan, row update) running
+through the kernels.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linkage import METHODS
+from repro.kernels.lw_update import lw_update_pallas
+from repro.kernels.minscan import masked_argmin_pallas
+from repro.kernels.pairwise import pairwise_sq_euclidean_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int, value: float = 0.0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n"))
+def pairwise(X: jax.Array, Y: jax.Array | None = None, *, block_m: int = 256,
+             block_n: int = 256) -> jax.Array:
+    """Padded/tiled pairwise squared-Euclidean distances via the kernel."""
+    X = jnp.asarray(X, jnp.float32)
+    Y = X if Y is None else jnp.asarray(Y, jnp.float32)
+    n, m = X.shape[0], Y.shape[0]
+    bm, bn = min(block_m, max(8, n)), min(block_n, max(128, m))
+    Xp = _pad_to(_pad_to(X, 128, axis=1), bm, axis=0)
+    Yp = _pad_to(_pad_to(Y, 128, axis=1), bn, axis=0)
+    D = pairwise_sq_euclidean_pallas(
+        Xp, Yp, block_m=bm, block_n=bn, interpret=_interpret()
+    )
+    return D[:n, :m]
+
+
+@partial(jax.jit, static_argnames=("block_m",))
+def masked_argmin(D: jax.Array, alive: jax.Array, *, block_m: int = 256):
+    """Masked (min, flat-argmin) of a square matrix via the kernel.
+
+    The flat index refers to the *padded* row length; the wrapper converts
+    back to (r, c) of the original matrix.
+    """
+    n = D.shape[0]
+    npad = n + ((-n) % 128)                     # square, lane-aligned
+    Dp = _pad_to(_pad_to(jnp.asarray(D, jnp.float32), npad, axis=0), npad, axis=1)
+    mp = npad
+    bm = block_m if npad % block_m == 0 else 128
+    alive_p = _pad_to(jnp.asarray(alive).astype(jnp.float32), npad, axis=0)
+    v, flat = masked_argmin_pallas(Dp, alive_p, block_m=bm, interpret=_interpret())
+    r, c = flat // mp, flat % mp
+    return v, r * n + c
+
+
+def lw_update(method: str, d_ki, d_kj, d_ij, n_i, n_j, sizes, keep, *,
+              block_n: int = 2048):
+    """Padded fused LW row update via the kernel."""
+    n = d_ki.shape[0]
+    pad = lambda a: _pad_to(jnp.asarray(a, jnp.float32), 128, axis=0)
+    bn = min(block_n, pad(d_ki).shape[0])
+    out = lw_update_pallas(
+        method,
+        pad(d_ki), pad(d_kj), d_ij, n_i, n_j,
+        pad(sizes), pad(keep.astype(jnp.float32)),
+        block_n=bn, interpret=_interpret(),
+    )
+    return out[:n]
+
+
+class _KResult(NamedTuple):
+    merges: jax.Array
+
+
+@partial(jax.jit, static_argnames=("method", "block_m"))
+def lance_williams_kernelized(D: jax.Array, method: str = "complete", *,
+                              block_m: int = 256) -> _KResult:
+    """Serial LW with Pallas inner loops (min-scan + fused row update).
+
+    Bit-compatible with :func:`repro.core.lance_williams.lance_williams`
+    (same masking, same row-major tie-breaking) — validated in tests.
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown linkage method {method!r}")
+    D = jnp.asarray(D, jnp.float32)
+    n = D.shape[0]
+    upper = jnp.triu(D, k=1)
+    D = jnp.where(jnp.any(jnp.tril(D, k=-1) != 0), D, upper + upper.T)
+    D = 0.5 * (D + D.T) * (1.0 - jnp.eye(n))
+
+    # pad once so every kernel call inside the loop is aligned
+    npad = n + ((-n) % 128)
+    bm = block_m if npad % block_m == 0 else 128
+    Dp = jnp.zeros((npad, npad), jnp.float32).at[:n, :n].set(D)
+    alive0 = jnp.arange(npad) < n
+    sizes0 = alive0.astype(jnp.float32)
+    ks = jnp.arange(npad)
+    interp = _interpret()
+
+    def step(t, state):
+        Dp, alive, sizes, merges = state
+        v, flat = masked_argmin_pallas(
+            Dp, alive.astype(jnp.float32), block_m=bm, interpret=interp
+        )
+        r, c = flat // npad, flat % npad
+        i, j = jnp.minimum(r, c), jnp.maximum(r, c)
+        keep = alive & (ks != i) & (ks != j)
+        new = lw_update_pallas(
+            method, Dp[:, i], Dp[:, j], v, sizes[i], sizes[j], sizes,
+            keep.astype(jnp.float32), block_n=min(2048, npad), interpret=interp,
+        )
+        Dp = Dp.at[i, :].set(new).at[:, i].set(new).at[i, i].set(0.0)
+        new_size = sizes[i] + sizes[j]
+        alive = alive.at[j].set(False)
+        sizes = sizes.at[i].set(new_size).at[j].set(0.0)
+        merges = merges.at[t].set(
+            jnp.stack([i.astype(jnp.float32), j.astype(jnp.float32), v, new_size])
+        )
+        return (Dp, alive, sizes, merges)
+
+    merges0 = jnp.zeros((n - 1, 4), jnp.float32)
+    _, _, _, merges = jax.lax.fori_loop(0, n - 1, step, (Dp, alive0, sizes0, merges0))
+    return _KResult(merges=merges)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``assert_allclose`` targets).
+
+Each ``ref_*`` mirrors the mathematical contract of its kernel with plain
+jax.numpy — no tiling, no Pallas — and is used by ``tests/test_kernels.py``
+across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.linkage import update_row
+
+
+def ref_pairwise_sq_euclidean(X, Y=None):
+    X = jnp.asarray(X, jnp.float32)
+    Y = X if Y is None else jnp.asarray(Y, jnp.float32)
+    xx = jnp.sum(X * X, axis=1)
+    yy = jnp.sum(Y * Y, axis=1)
+    return jnp.maximum(xx[:, None] + yy[None, :] - 2.0 * (X @ Y.T), 0.0)
+
+
+def ref_masked_argmin(D, alive):
+    """(min, flat-argmin) over live off-diagonal cells, row-major ties."""
+    D = jnp.asarray(D, jnp.float32)
+    n = D.shape[0]
+    alive = jnp.asarray(alive).astype(bool)
+    eye = jnp.eye(n, dtype=bool)
+    valid = alive[:, None] & alive[None, :] & ~eye
+    Dm = jnp.where(valid, D, jnp.inf)
+    flat = jnp.argmin(Dm)
+    return Dm.reshape(-1)[flat], flat.astype(jnp.int32)
+
+
+def ref_lw_update(method, d_ki, d_kj, d_ij, n_i, n_j, sizes, keep):
+    new = update_row(
+        method,
+        jnp.asarray(d_ki, jnp.float32),
+        jnp.asarray(d_kj, jnp.float32),
+        jnp.asarray(d_ij, jnp.float32),
+        jnp.asarray(n_i, jnp.float32),
+        jnp.asarray(n_j, jnp.float32),
+        jnp.asarray(sizes, jnp.float32),
+    )
+    return jnp.where(jnp.asarray(keep).astype(bool), new, 0.0)

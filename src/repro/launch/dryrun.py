@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "")
+).strip()
+# ^ MUST precede every other import (jax locks the device count on first
+#   backend init).  512 placeholder host devices back both the 16×16
+#   single-pod mesh and the 2×16×16 multi-pod mesh.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the production mesh, the parameter/optimizer/
+input ShapeDtypeStructs (no allocation), lowers the jitted step with full
+in/out shardings, compiles, and records:
+
+* ``compiled.memory_analysis()``  — proves the cell fits per-device HBM
+* ``compiled.cost_analysis()``    — per-device FLOPs/bytes for §Roofline
+* collective operand bytes parsed from the optimized HLO
+
+Results stream to a JSONL file consumed by ``benchmarks/roofline_report``
+and EXPERIMENTS.md.  Any sharding mismatch / OOM-at-compile / unsupported
+collective is a bug in the framework — the run fails loudly.
+
+Usage::
+
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun.jsonl
+    python -m repro.launch.dryrun --arch llama3-405b --shape train_4k --mesh single
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, cell_runnable, get_config, input_specs, list_archs
+from repro.configs.shapes import Shape
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    make_decode_step,
+    make_optimizer,
+    make_prefill_step,
+    make_train_step,
+)
+from repro.models import model_api
+from repro.roofline import analysis as ra
+
+
+def _abstract_params(cfg):
+    return jax.eval_shape(lambda: model_api.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def lower_cell(cfg, shape: Shape, mesh, multi_pod: bool):
+    """Build + lower the right step for one cell.  Returns (lowered, args)."""
+    specs = input_specs(cfg, shape)
+    params = _abstract_params(cfg)
+    long_ctx = shape.name == "long_500k"
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, mesh, multi_pod=multi_pod,
+                               batch_example=specs, donate=True)
+        opt = jax.eval_shape(make_optimizer(cfg).init, params)
+        return step.lower(params, opt, specs)
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, mesh, multi_pod=multi_pod,
+                                 seq_len=shape.seq_len, batch_example=specs)
+        return step.lower(params, specs)
+    # decode
+    cache = specs.pop("cache")
+    step = make_decode_step(cfg, mesh, multi_pod=multi_pod,
+                            long_context=long_ctx,
+                            batch_example={**specs, "cache": cache})
+    return step.lower(params, cache, specs)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, reduced: bool = False):
+    shape = SHAPES[shape_name]
+    ok, reason = cell_runnable(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    cfg = get_config(arch, reduced=reduced)
+    multi_pod = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh, multi_pod)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+    }
+    roof = ra.analyze(compiled, chips)
+    mf = ra.model_flops(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "roofline": roof.to_dict(),
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / chips,
+        "useful_flops_ratio": (mf / chips) / max(roof.flops_per_device, 1.0),
+        "strategy": cfg.strategy,
+    }
+    print(f"[dryrun] {arch} × {shape_name} × {mesh_kind}: "
+          f"compile {t_compile:.1f}s, "
+          f"dominant={roof.dominant} "
+          f"(c={roof.compute_s:.4f}s m={roof.memory_s:.4f}s "
+          f"x={roof.collective_s:.4f}s), "
+          f"temp={mem_d['temp_bytes'] and mem_d['temp_bytes']/2**30:.2f}GiB")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced configs (CI smoke of the dry-run driver)")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    if r.get("status") in ("ok", "skipped"):
+                        done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    continue
+
+    failures = 0
+    with open(args.out, "a") as out:
+        for arch in archs:
+            for shape in shapes:
+                for mesh_kind in meshes:
+                    if (arch, shape, mesh_kind) in done:
+                        continue
+                    try:
+                        rec = run_cell(arch, shape, mesh_kind,
+                                       reduced=args.reduced)
+                    except Exception as e:  # noqa: BLE001 — record and move on
+                        failures += 1
+                        rec = {"arch": arch, "shape": shape,
+                               "mesh": mesh_kind, "status": "error",
+                               "error": f"{type(e).__name__}: {e}",
+                               "traceback": traceback.format_exc()[-4000:]}
+                        print(f"[dryrun] FAIL {arch} × {shape} × {mesh_kind}: "
+                              f"{type(e).__name__}: {e}")
+                    out.write(json.dumps(rec) + "\n")
+                    out.flush()
+    print(f"[dryrun] finished; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

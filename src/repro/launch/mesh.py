@@ -1,0 +1,38 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never module-level state) so that
+importing this module touches no jax device machinery — the dry-run sets
+``--xla_force_host_platform_device_count=512`` before first jax init and
+only then builds meshes.
+
+Single pod  : (data=16, model=16)              — 256 chips (v5e pod)
+Multi-pod   : (pod=2, data=16, model=16)       — 512 chips across DCN
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(n_devices: int | None = None,
+                    model_axis: int | None = None) -> Mesh:
+    """Small mesh for tests: factors available devices into (data, model)."""
+    n = n_devices or len(jax.devices())
+    if model_axis is None:
+        model_axis = 1
+        for m in (4, 2, 8):
+            if n % m == 0:
+                model_axis = m
+                break
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

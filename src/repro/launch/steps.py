@@ -1,0 +1,281 @@
+"""Jitted step builders: train_step / prefill_step / decode_step.
+
+Builds the full in/out sharding trees (params, optimizer state, batch,
+cache) from the logical-axis rules and wraps tracing in the sharding
+scope so ``logical_constraint`` / the attention ``shard_map``s see the
+mesh.  ``CompiledStep.lower(...)`` is what the multi-pod dry-run calls.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (
+    make_rules,
+    sharding_scope,
+    tree_shardings,
+)
+from repro.models import model_api
+from repro.optim import AdamW, QTensor
+from repro.optim.schedule import warmup_cosine
+
+
+def _spec(mesh: Mesh | None, *parts) -> Any:
+    if mesh is None:
+        return None
+    clean = []
+    names = set(mesh.axis_names)
+    for p in parts:
+        if p is None:
+            clean.append(None)
+        else:
+            axes = tuple(a for a in (p if isinstance(p, tuple) else (p,))
+                         if a in names)
+            clean.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+    return NamedSharding(mesh, P(*clean))
+
+
+def _batch_part(rules) -> tuple | None:
+    ax = rules.get("batch")
+    return tuple(ax) if ax else None
+
+
+def _kv_part(rules) -> tuple | None:
+    ax = rules.get("kv_seq")
+    return tuple(ax) if ax else None
+
+
+def batch_shardings(cfg: ModelConfig, batch_tree: dict, rules,
+                    mesh: Mesh | None) -> Any:
+    """Sharding tree matching an input batch dict (incl. nested cache)."""
+    if mesh is None:
+        return jax.tree.map(lambda _: None, batch_tree)
+    b = _batch_part(rules)
+    kv = _kv_part(rules)
+    # batch axes that also shard the kv dim may not shard batch again
+    kvset = set(kv or ())
+    b_kv = tuple(a for a in (b or ()) if a not in kvset) or None
+
+    def for_key(key: str, leaf) -> Any:
+        nd = len(leaf.shape)
+        if key in ("tokens", "labels", "loss_mask"):
+            return _spec(mesh, b, None)
+        if key in ("image_embeds", "audio_feats"):
+            return _spec(mesh, b, None, None)
+        if key == "mrope_positions":
+            return _spec(mesh, None, b, None)
+        if key in ("k", "v", "attn_k", "attn_v", "self_k", "self_v",
+                   "cross_k", "cross_v"):
+            return _spec(mesh, None, b_kv, kv, None, None)
+        if key in ("kv_pos", "cross_pos"):
+            return _spec(mesh, b_kv, kv)
+        if key == "cur":
+            return _spec(mesh)
+        if key in ("conv_x", "conv_b", "conv_c"):
+            lead = (None,) * (nd - 3)
+            last = "model" if key == "conv_x" else None
+            return _spec(mesh, *lead, b_kv, None, last)
+        if key == "ssd":
+            lead = (None,) * (nd - 4)
+            return _spec(mesh, *lead, b_kv, "model", None, None)
+        if key in ("tm_shift", "cm_shift"):
+            return _spec(mesh, None, b_kv, None)
+        if key == "wkv":
+            return _spec(mesh, None, b_kv, None, None, None)
+        return _spec(mesh, *([None] * nd))
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            return {k: (walk(v) if isinstance(v, dict) else for_key(k, v))
+                    for k, v in tree.items()}
+        return jax.tree.map(lambda _: None, tree)
+
+    return walk(batch_tree)
+
+
+def param_shardings(cfg: ModelConfig, rules, mesh: Mesh | None):
+    specs = model_api.param_specs(cfg)
+    if mesh is None:
+        return jax.tree.map(lambda _: None, specs,
+                            is_leaf=lambda s: hasattr(s, "axes"))
+    return tree_shardings(specs, rules, mesh)
+
+
+def opt_shardings(cfg: ModelConfig, p_shardings, opt_state_shapes,
+                  mesh: Mesh | None):
+    """m/v inherit the param shardings; QTensor scale vectors replicate."""
+    if mesh is None:
+        return jax.tree.map(lambda _: None, opt_state_shapes,
+                            is_leaf=lambda x: isinstance(x, QTensor))
+    rep = NamedSharding(mesh, P())
+
+    def mv(psh, leaf):
+        if isinstance(leaf, QTensor):
+            # scale has q's rank (blocks along the last axis) → same spec
+            return QTensor(q=psh, scale=psh)
+        return psh
+
+    from repro.optim import AdamWState
+
+    return AdamWState(
+        step=rep,
+        m=jax.tree.map(mv, p_shardings, opt_state_shapes.m,
+                       is_leaf=lambda x: isinstance(x, QTensor)),
+        v=jax.tree.map(mv, p_shardings, opt_state_shapes.v,
+                       is_leaf=lambda x: isinstance(x, QTensor)),
+    )
+
+
+class CompiledStep:
+    """A jitted step whose tracing runs inside the sharding scope."""
+
+    def __init__(self, fn, mesh: Mesh | None, rules, *, in_shardings=None,
+                 out_shardings=None, donate_argnums=()):
+        kw = {}
+        if in_shardings is not None:
+            kw["in_shardings"] = in_shardings
+        if out_shardings is not None:
+            kw["out_shardings"] = out_shardings
+        self.mesh, self.rules = mesh, rules or {}
+        self._jit = jax.jit(fn, donate_argnums=donate_argnums, **kw)
+
+    def __call__(self, *args):
+        with sharding_scope(self.mesh, self.rules):
+            return self._jit(*args)
+
+    def lower(self, *args):
+        with sharding_scope(self.mesh, self.rules):
+            return self._jit.lower(*args)
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(cfg: ModelConfig, *, peak_lr: float = 3e-4,
+                   warmup: int = 100, total: int = 10_000) -> AdamW:
+    return AdamW(lr=warmup_cosine(peak_lr, warmup, total),
+                 state_dtype=cfg.opt_state_dtype)
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh | None, *,
+                    multi_pod: bool = False, optimizer: AdamW | None = None,
+                    batch_example: dict | None = None,
+                    donate: bool = True) -> CompiledStep:
+    rules = make_rules(cfg.strategy, multi_pod=multi_pod) if mesh else {}
+    optimizer = optimizer or make_optimizer(cfg)
+    k = max(1, cfg.microbatches)
+
+    def loss_fn(params, mb):
+        return model_api.loss(cfg, params, mb)
+
+    # grad accumulators must be born SHARDED like the params — otherwise
+    # XLA materializes a replicated fp32 copy of the full model (§Perf-1c)
+    grad_sh = param_shardings(cfg, make_rules(cfg.strategy,
+                                              multi_pod=multi_pod)
+                              if mesh else {}, mesh) if mesh else None
+
+    def step(params, opt_state, batch):
+        if k == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if grad_sh is not None:
+                g0 = jax.tree.map(jax.lax.with_sharding_constraint, g0, grad_sh)
+
+            def acc(carry, mb):
+                tot_l, tot_g = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                tot_g = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), tot_g, g)
+                if grad_sh is not None:
+                    tot_g = jax.tree.map(jax.lax.with_sharding_constraint,
+                                         tot_g, grad_sh)
+                return (tot_l + l, tot_g), None
+
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), g0), mbs)
+            loss = loss / k
+            grads = jax.tree.map(lambda g: g / k, grads)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    if mesh is None:
+        return CompiledStep(step, None, rules,
+                            donate_argnums=(0, 1) if donate else ())
+
+    p_sh = param_shardings(cfg, rules, mesh)
+    p_shapes = jax.eval_shape(
+        lambda: model_api.init_params(cfg, jax.random.PRNGKey(0)))
+    o_shapes = jax.eval_shape(optimizer.init, p_shapes)
+    o_sh = opt_shardings(cfg, p_sh, o_shapes, mesh)
+    b_sh = (batch_shardings(cfg, batch_example, rules, mesh)
+            if batch_example is not None else None)
+    in_sh = (p_sh, o_sh, b_sh) if b_sh is not None else None
+    rep = NamedSharding(mesh, P())
+    out_sh = (p_sh, o_sh, {"loss": rep})
+    return CompiledStep(step, mesh, rules, in_shardings=in_sh,
+                        out_shardings=out_sh,
+                        donate_argnums=(0, 1) if donate else ())
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh | None, *,
+                      multi_pod: bool = False, seq_len: int,
+                      batch_example: dict | None = None,
+                      long_context: bool = False) -> CompiledStep:
+    rules = (make_rules(cfg.strategy, multi_pod=multi_pod,
+                        long_context=long_context) if mesh else {})
+
+    def step(params, batch):
+        return model_api.apply(cfg, params, batch, "prefill")
+
+    if mesh is None:
+        return CompiledStep(step, None, rules)
+    p_sh = param_shardings(cfg, rules, mesh)
+    b_sh = (batch_shardings(cfg, batch_example, rules, mesh)
+            if batch_example is not None else None)
+    in_sh = (p_sh, b_sh) if b_sh is not None else None
+    # logits replicated-ish; cache laid out per rules
+    b = batch_example["tokens"].shape[0] if batch_example else 1
+    cache_tree = model_api.cache_specs(cfg, b, seq_len)
+    c_sh = batch_shardings(cfg, cache_tree, rules, mesh)
+    out_sh = (NamedSharding(mesh, P()), c_sh)
+    return CompiledStep(step, mesh, rules, in_shardings=in_sh,
+                        out_shardings=out_sh)
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh | None, *,
+                     multi_pod: bool = False, long_context: bool = False,
+                     batch_example: dict | None = None,
+                     donate_cache: bool = True) -> CompiledStep:
+    rules = (make_rules(cfg.strategy, multi_pod=multi_pod,
+                        long_context=long_context) if mesh else {})
+
+    def step(params, cache, batch):
+        return model_api.apply(cfg, params, batch, "decode", cache)
+
+    if mesh is None:
+        return CompiledStep(step, None, rules,
+                            donate_argnums=(1,) if donate_cache else ())
+    p_sh = param_shardings(cfg, rules, mesh)
+    if batch_example is not None:
+        cache_tree = batch_example["cache"]
+        batch_only = {k: v for k, v in batch_example.items() if k != "cache"}
+        c_sh = batch_shardings(cfg, cache_tree, rules, mesh)
+        b_sh = batch_shardings(cfg, batch_only, rules, mesh)
+        in_sh = (p_sh, c_sh, b_sh)
+        out_sh = (NamedSharding(mesh, P()), c_sh)
+    else:
+        in_sh = out_sh = None
+    return CompiledStep(step, mesh, rules,
+                        in_shardings=in_sh, out_shardings=out_sh,
+                        donate_argnums=(1,) if donate_cache else ())

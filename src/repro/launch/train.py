@@ -1,0 +1,111 @@
+"""End-to-end training driver (example (b) deliverable).
+
+Fault-tolerant by construction: checkpoint/resume via CheckpointManager
+(atomic commits, async save), failure injection (``--inject-failure-at``),
+straggler deadline monitoring, and exact data-pipeline resume (the
+pipeline state is part of the checkpoint).
+
+Typical runs::
+
+    # ~100M-param model for a few hundred steps on CPU/small mesh
+    python -m repro.launch.train --arch gemma3-1b --reduced --steps 200
+
+    # kill/restart drill
+    python -m repro.launch.train --arch chatglm3-6b --reduced --steps 60 \
+        --inject-failure-at 25 --save-every 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import TokenPipeline
+from repro.distributed.fault import FailurePlan, StepDeadline, run_resilient_loop
+from repro.launch.mesh import batch_axes, make_smoke_mesh
+from repro.launch.steps import make_optimizer, make_train_step
+from repro.models import model_api
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="results/ckpt")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--inject-failure-at", type=int, nargs="*", default=[])
+    ap.add_argument("--no-mesh", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = None if (args.no_mesh or len(jax.devices()) == 1) else make_smoke_mesh()
+    print(f"[train] arch={cfg.name} devices={len(jax.devices())} mesh={mesh}")
+
+    params = model_api.init_params(cfg, jax.random.PRNGKey(args.seed))
+    optimizer = make_optimizer(cfg, peak_lr=args.lr, warmup=20,
+                               total=args.steps)
+    opt_state = optimizer.init(params)
+
+    pipe = TokenPipeline(
+        vocab=cfg.vocab, batch=args.batch, seq_len=args.seq, mesh=mesh,
+        batch_axes=batch_axes(mesh) if mesh else ("data",), seed=args.seed)
+    example = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+               for k, v in pipe._host_batch(0).items()}
+    step_fn = make_train_step(cfg, mesh, optimizer=optimizer,
+                              batch_example=example if mesh else None)
+
+    mgr = CheckpointManager(args.ckpt_dir, keep_last=3)
+    state = {"params": params, "opt": opt_state}
+    losses: list[float] = []
+
+    def do_step(step: int) -> dict:
+        batch = pipe.next()
+        state["params"], state["opt"], metrics = step_fn(
+            state["params"], state["opt"], batch)
+        losses.append(float(metrics["loss"]))
+        return {"loss": losses[-1]}
+
+    def do_save(step: int) -> None:
+        mgr.async_save(step, {"params": state["params"], "opt": state["opt"]},
+                       extra={"pipeline": pipe.state.to_dict(), "step": step})
+
+    def do_restore() -> int:
+        like = jax.eval_shape(lambda: {"params": state["params"],
+                                       "opt": state["opt"]})
+        restored, extra = mgr.restore(None, like)
+        state["params"], state["opt"] = restored["params"], restored["opt"]
+        pipe.state.step = int(extra["pipeline"]["step"])
+        return int(extra["step"])
+
+    t0 = time.time()
+    final = run_resilient_loop(
+        start_step=0, total_steps=args.steps, step_fn=do_step,
+        save_fn=do_save, restore_fn=do_restore,
+        save_every=args.save_every,
+        failure_plan=FailurePlan(fail_at=tuple(args.inject_failure_at)),
+        deadline=StepDeadline(),
+    )
+    mgr.wait()
+    dt = time.time() - t0
+    first = np.mean(losses[:10]) if len(losses) >= 10 else losses[0]
+    last = np.mean(losses[-10:])
+    print(f"[train] finished step {final} in {dt:.1f}s; "
+          f"loss {first:.4f} → {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    pipe.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Token embedding / unembedding + the chunked cross-entropy loss.
+
+The LM head is vocab-TP sharded; logits are constrained to
+``(batch, seq, vocab=None)`` so the per-device logits block stays
+``tokens_local × V``.  The training loss never materializes the full
+``(tokens, V)`` logits tensor: it maps over sequence chunks (rematerialized
+in backward), which is what keeps the 128k-vocab archs inside HBM.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint as lc
+from repro.models.common import ParamSpec, layer_norm, rms_norm
+
+
+def embedding_specs(cfg: ModelConfig) -> dict:
+    V, d = cfg.vocab_padded, cfg.d_model
+    specs = {
+        "embedding": ParamSpec((V, d), ("p_vocab", "p_embed"), "embed"),
+        "final_norm": ParamSpec((d,), ("p_none",),
+                                "zeros" if cfg.norm_type == "rms" else "ones"),
+    }
+    if cfg.norm_type == "layer":
+        specs["final_norm_bias"] = ParamSpec((d,), ("p_none",), "zeros")
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, V), ("p_embed", "p_vocab"), "scaled")
+    return specs
+
+
+def embed(cfg: ModelConfig, params: dict, tokens: jax.Array) -> jax.Array:
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.embed_scale:
+        x = x * math.sqrt(cfg.d_model)
+    return lc(x, "batch", "seq", "embed")
+
+
+def final_norm(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm_type == "layer":
+        return layer_norm(x, params["final_norm"], params["final_norm_bias"],
+                          cfg.norm_eps)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def logits_fn(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    """hidden (..., d) → logits (..., V), fp32 accumulation.
+
+    The unembedding stays in its storage dtype (bf16) with the FSDP axis
+    gathered per use — casting it fp32 first doubled the gather bytes and
+    repeated per loss chunk (§Perf iteration 1c)."""
+    w = params["embedding"].T if cfg.tie_embeddings else params["lm_head"]
+    w = lc(w, None, "p_vocab")       # compute layout: d full, vocab-TP
+    out = jnp.einsum("...d,dv->...v", hidden, w,
+                     preferred_element_type=jnp.float32)
+    if out.ndim == 3:
+        out = lc(out, "batch", "seq", "vocab")
+    return out
+
+
+def chunked_ce_loss(cfg: ModelConfig, params: dict, hidden: jax.Array,
+                    labels: jax.Array, mask: jax.Array | None = None):
+    """Mean next-token CE without materializing (tokens, V) logits.
+
+    hidden (b, s, d); labels (b, s) int32; mask optional (b, s) {0,1}.
+    Chunked over the sequence with remat — backward recomputes each chunk's
+    logits instead of saving them.
+    """
+    b, s, d = hidden.shape
+    chunk = max(1, min(cfg.loss_chunk, s))
+    while s % chunk:
+        chunk //= 2
+    n_chunks = s // chunk
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+
+    hs = jnp.moveaxis(hidden.reshape(b, n_chunks, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, n_chunks, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, n_chunks, chunk).astype(jnp.float32), 1, 0)
+
+    def one(args):
+        h, lab, m = args
+        lg = logits_fn(cfg, params, h)                     # (b, chunk, V) fp32
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = jnp.take_along_axis(lg, lab[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - tgt) * m), jnp.sum(m)
+
+    losses, counts = jax.lax.map(jax.checkpoint(one), (hs, ls, ms))
+    total, cnt = jnp.sum(losses), jnp.maximum(jnp.sum(counts), 1.0)
+    return total / cnt

@@ -1,0 +1,203 @@
+"""Mamba-2 (SSD) block — the state-space mixer used by zamba2-7b.
+
+Chunked SSD algorithm (Dao & Gu 2024, "minimal ssd" form): the sequence is
+split into chunks; within a chunk the output is a masked quadratic form
+(attention-like, runs on the MXU), across chunks an O(1)-state recurrence
+carries ``(heads, head_dim, d_state)`` states.  Decode is the pure
+recurrence step — O(1) per token, which is what makes ``long_500k``
+runnable for the SSM archs.
+
+Sharding: the residual arrives sequence-sharded; inside the block the
+sequence is gathered (the depthwise causal conv and chunk scan need
+contiguous time) and the ``d_inner``/heads dimension is TP-sharded over
+``model`` (zamba2: 112 heads / 16 = 7 per shard).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint as lc
+from repro.models.common import ParamSpec
+
+
+def mamba2_specs(cfg: ModelConfig) -> dict:
+    d, din = cfg.d_model, cfg.d_inner_
+    n, hd = cfg.ssm_state, cfg.ssm_head_dim
+    heads = din // hd
+    cw = cfg.conv_width
+    return {
+        # in_proj → [z (din), x (din), B (n), C (n), dt (heads)]
+        "w_in_z": ParamSpec((d, din), ("p_embed", "p_inner"), "scaled"),
+        "w_in_x": ParamSpec((d, din), ("p_embed", "p_inner"), "scaled"),
+        "w_in_b": ParamSpec((d, n), ("p_embed", "p_state"), "scaled"),
+        "w_in_c": ParamSpec((d, n), ("p_embed", "p_state"), "scaled"),
+        "w_in_dt": ParamSpec((d, heads), ("p_embed", "p_inner"), "scaled"),
+        "dt_bias": ParamSpec((heads,), ("p_inner",), "zeros"),
+        "a_log": ParamSpec((heads,), ("p_inner",), "zeros"),
+        "d_skip": ParamSpec((heads,), ("p_inner",), "ones"),
+        "conv_x": ParamSpec((cw, din), ("p_conv", "p_inner"), "scaled"),
+        "conv_b": ParamSpec((cw, n), ("p_conv", "p_state"), "scaled"),
+        "conv_c": ParamSpec((cw, n), ("p_conv", "p_state"), "scaled"),
+        "norm_w": ParamSpec((din,), ("p_inner",), "zeros"),
+        "w_out": ParamSpec((din, d), ("p_inner", "p_embed"), "scaled"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, state: jax.Array | None = None):
+    """Depthwise causal conv along time.  x (b, s, c); w (cw, c).
+
+    Returns (y, new_state) where state is the last cw−1 inputs (for decode).
+    """
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)             # (b, s+cw-1, c)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(lw: jax.Array) -> jax.Array:
+    """lw (..., q) → (..., q, q) lower-triangular pairwise sums
+    ``out[i, j] = Σ_{m=j+1..i} lw[m]`` (−inf above the diagonal)."""
+    q = lw.shape[-1]
+    cs = jnp.cumsum(lw, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(xh, dt, a_log, B, C, *, chunk: int = 128, init_state=None):
+    """Chunked SSD.  xh (b, s, h, p); dt (b, s, h) (post-softplus);
+    B, C (b, s, n) (single group) → (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = xh.shape
+    n = B.shape[-1]
+    Q = min(chunk, s)
+    while s % Q:
+        Q //= 2
+    nc = s // Q
+
+    A = -jnp.exp(a_log.astype(jnp.float32))            # (h,) negative
+    lw = (dt.astype(jnp.float32) * A).reshape(b, nc, Q, h)     # log-decay
+    xdt = (xh.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+           ).reshape(b, nc, Q, h, p)
+    Bc = B.astype(jnp.float32).reshape(b, nc, Q, n)
+    Cc = C.astype(jnp.float32).reshape(b, nc, Q, n)
+
+    lw_t = jnp.moveaxis(lw, -1, 2)                     # (b, nc, h, Q)
+    L = jnp.exp(_segsum(lw_t))                         # (b, nc, h, Q, Q)
+
+    # intra-chunk (quadratic, masked)
+    Y_diag = jnp.einsum("bcqn,bckn,bchqk,bckhp->bcqhp", Cc, Bc, L, xdt)
+
+    # chunk summaries → inter-chunk recurrence
+    cs = jnp.cumsum(lw_t, axis=-1)                     # (b, nc, h, Q)
+    tot = cs[..., -1:]                                 # (b, nc, h, 1)
+    decay_to_end = jnp.exp(tot - cs)                   # (b, nc, h, Q)
+    states = jnp.einsum("bckn,bchk,bckhp->bchpn", Bc, decay_to_end, xdt)
+
+    chunk_decay = jnp.exp(tot[..., 0])                 # (b, nc, h)
+
+    def step(carry, inp):
+        st, dec = inp                                  # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                              # emit state BEFORE chunk
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)      # (b, nc, h, p, n)
+
+    # inter-chunk contribution
+    decay_from_start = jnp.exp(cs)                     # (b, nc, h, Q)
+    Y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp", Cc, prev_states,
+                       decay_from_start)
+
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_block(cfg: ModelConfig, lp: dict, x: jax.Array, *,
+                 mode: str, state=None):
+    """x (b, s, d) → (y (b, s, d), new_state).
+
+    state = {"conv_x","conv_b","conv_c","ssd"} for decode; None for train.
+    """
+    din = cfg.d_inner_
+    hd = cfg.ssm_head_dim
+    heads = din // hd
+    dt_f32 = jnp.float32
+
+    z = x @ lp["w_in_z"]
+    xi = x @ lp["w_in_x"]
+    Bi = x @ lp["w_in_b"]
+    Ci = x @ lp["w_in_c"]
+    dt = x @ lp["w_in_dt"] + lp["dt_bias"].astype(x.dtype)
+    xi = lc(xi, "batch", None, "inner")
+    z = lc(z, "batch", None, "inner")
+    dt = jax.nn.softplus(dt.astype(dt_f32))
+
+    st = state or {}
+    xi, cx = _causal_conv(xi, lp["conv_x"], st.get("conv_x"))
+    Bi, cb = _causal_conv(Bi, lp["conv_b"], st.get("conv_b"))
+    Ci, cc = _causal_conv(Ci, lp["conv_c"], st.get("conv_c"))
+
+    xh = xi.reshape(*xi.shape[:2], heads, hd)
+
+    if mode == "decode":
+        # pure recurrence, one (or few) steps
+        ssd_prev = st["ssd"].astype(dt_f32)            # (b, h, p, n)
+
+        def one(carry, inp):
+            xt, dtt, bt, ct = inp                      # (b,h,p),(b,h),(b,n),(b,n)
+            A = -jnp.exp(lp["a_log"].astype(dt_f32))
+            dec = jnp.exp(dtt * A)                     # (b, h)
+            upd = jnp.einsum("bhp,bn->bhpn", xt * dtt[..., None], bt)
+            carry = carry * dec[..., None, None] + upd
+            yt = jnp.einsum("bhpn,bn->bhp", carry, ct)
+            return carry, yt
+
+        seq = (jnp.moveaxis(xh.astype(dt_f32), 1, 0),
+               jnp.moveaxis(dt, 1, 0),
+               jnp.moveaxis(Bi.astype(dt_f32), 1, 0),
+               jnp.moveaxis(Ci.astype(dt_f32), 1, 0))
+        ssd_new, ys = jax.lax.scan(one, ssd_prev, seq)
+        y = jnp.moveaxis(ys, 0, 1)                     # (b, s, h, p)
+    else:
+        y, ssd_new = ssd_scan(xh, dt, lp["a_log"], Bi, Ci,
+                              init_state=st.get("ssd"))
+
+    y = y + xh.astype(dt_f32) * lp["d_skip"].astype(dt_f32)[:, None]
+    y = y.reshape(*x.shape[:2], din)
+    # gated RMS norm (mamba2's norm-before-out)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * (1.0 + lp["norm_w"].astype(dt_f32))
+    y = (y * jax.nn.silu(z.astype(dt_f32))).astype(x.dtype)
+    out = y @ lp["w_out"]
+    out = lc(out, "batch", "seq", "embed")
+
+    new_state = {"conv_x": cx, "conv_b": cb, "conv_c": cc,
+                 "ssd": ssd_new.astype(dt_f32)}
+    return out, new_state
+
+
+def mamba2_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    """Per-layer decode-state ShapeDtypeStructs."""
+    din, hd, n, cw = cfg.d_inner_, cfg.ssm_head_dim, cfg.ssm_state, cfg.conv_width
+    heads = din // hd
+    f32, dt = jnp.float32, jnp.dtype(cfg.compute_dtype)
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, cw - 1, din), dt),
+        "conv_b": jax.ShapeDtypeStruct((batch, cw - 1, n), dt),
+        "conv_c": jax.ShapeDtypeStruct((batch, cw - 1, n), dt),
+        "ssd": jax.ShapeDtypeStruct((batch, heads, hd, n), f32),
+    }

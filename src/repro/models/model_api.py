@@ -1,0 +1,113 @@
+"""Unified model API: family dispatch for specs / apply / cache / loss.
+
+Every architecture exposes the same four entry points regardless of family:
+
+* ``param_specs(cfg)``            — ParamSpec tree
+* ``apply(cfg, params, batch, mode, cache)`` — mode ∈ train|prefill|decode
+* ``cache_specs(cfg, batch, seq)``— decode-cache ShapeDtypeStruct tree
+* ``loss(cfg, params, batch)``    — mean next-token CE (chunked)
+
+The launch layer (train/serve/dryrun) builds its jitted steps on these.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import embedding as emb
+from repro.models import rwkv6, transformer, whisper, zamba
+from repro.models.moe import moe_apply, moe_mlp_specs
+
+
+def _moe_mlp_specs_fn(cfg: ModelConfig):
+    def fn(d_model, d_ff, act):
+        return moe_mlp_specs(d_model, cfg.moe_dff_, act, n_experts=cfg.n_experts)
+    return fn
+
+
+def _moe_mlp_apply_fn(cfg: ModelConfig, mode: str):
+    cf = 2.0 if mode == "decode" else cfg.capacity_factor
+
+    def fn(p, x, act):
+        return moe_apply(p, x, act, top_k=cfg.top_k, capacity_factor=cf,
+                         variant=cfg.moe_variant)
+    return fn
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    if cfg.family in ("dense", "vlm"):
+        return transformer.dense_specs(cfg)
+    if cfg.family == "moe":
+        return transformer.dense_specs(cfg, mlp_fn=_moe_mlp_specs_fn(cfg))
+    if cfg.family == "rwkv":
+        return rwkv6.rwkv_specs(cfg)
+    if cfg.family == "hybrid":
+        return zamba.zamba_specs(cfg)
+    if cfg.family == "encdec":
+        return whisper.whisper_specs(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def apply(cfg: ModelConfig, params: dict, batch: dict, mode: str,
+          cache: dict | None = None):
+    if cfg.family in ("dense", "vlm"):
+        return transformer.dense_apply(cfg, params, batch, mode, cache)
+    if cfg.family == "moe":
+        return transformer.dense_apply(
+            cfg, params, batch, mode, cache,
+            mlp_apply_fn=_moe_mlp_apply_fn(cfg, mode))
+    if cfg.family == "rwkv":
+        return rwkv6.rwkv_apply(cfg, params, batch, mode, cache)
+    if cfg.family == "hybrid":
+        return zamba.zamba_apply(cfg, params, batch, mode, cache)
+    if cfg.family == "encdec":
+        return whisper.whisper_apply(cfg, params, batch, mode, cache)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    if cfg.family in ("dense", "vlm", "moe"):
+        return transformer.init_cache_specs(cfg, batch, seq_len)
+    if cfg.family == "rwkv":
+        return rwkv6.rwkv_state_specs(cfg, batch)
+    if cfg.family == "hybrid":
+        return zamba.zamba_cache_specs(cfg, batch, seq_len)
+    if cfg.family == "encdec":
+        return whisper.whisper_cache_specs(cfg, batch, seq_len)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Zero-initialized cache (kv_pos slots marked −1 = unwritten)."""
+    specs = cache_specs(cfg, batch, seq_len)
+
+    def zero(sd: jax.ShapeDtypeStruct):
+        return jnp.zeros(sd.shape, sd.dtype)
+
+    cache = jax.tree.map(zero, specs)
+    for key in ("kv_pos",):
+        if key in cache:
+            cache[key] = jnp.full(cache[key].shape, -1, jnp.int32)
+    return cache
+
+
+def loss(cfg: ModelConfig, params: dict, batch: dict) -> jax.Array:
+    """Mean next-token cross-entropy over the batch (chunked logits)."""
+    from repro.models.common import cast_cotangent_bf16
+
+    hidden = apply(cfg, params, batch, "train")
+    # keep the backward residual stream in the trunk's dtype (§Perf-1d)
+    hidden = cast_cotangent_bf16(hidden)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    return emb.chunked_ce_loss(cfg, params, hidden, labels, mask)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    from repro.models.common import init_params as _init
+
+    return _init(param_specs(cfg), key, jnp.dtype(cfg.param_dtype))

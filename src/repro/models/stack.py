@@ -1,0 +1,70 @@
+"""Layer stacking + scan-over-layers with remat policies.
+
+All models stack per-layer parameters on a leading ``layers`` axis and run
+``lax.scan`` over the stack — HLO size stays O(1) in depth (llama3-405b's
+126 layers compile as one loop).  Remat policies:
+
+* ``none``   — save everything (decode/prefill, or small models)
+* ``full``   — ``jax.checkpoint`` each layer: only the layer-boundary
+  residual is live during backward
+* ``nested`` — scan-of-scans (√L outer × √L inner), checkpointing the inner
+  scan: only O(√L) boundaries are saved (the 405b/314b memory policy)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, is_spec
+
+
+def stack_specs(layer_specs, n_layers: int):
+    """Prefix every leaf spec with a ``(n_layers,)`` ``p_layers`` axis."""
+
+    def one(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n_layers,) + s.shape, ("p_layers",) + s.axes,
+                         s.init, s.scale, s.dtype)
+
+    return jax.tree.map(one, layer_specs, is_leaf=is_spec)
+
+
+def _nested_factors(n: int) -> tuple[int, int]:
+    """Factor n = outer × inner with inner as close to √n as possible."""
+    best = (n, 1)
+    for i in range(2, int(math.isqrt(n)) + 1):
+        if n % i == 0:
+            best = (n // i, i)
+    return best
+
+
+def scan_blocks(body: Callable, x0, xs, n_layers: int, remat: str = "none"):
+    """Run ``body(carry, xs_slice) -> (carry, ys_slice)`` over the stack.
+
+    ``xs`` is a pytree whose leaves all have leading dim ``n_layers`` (or
+    ``None``).  Returns (final_carry, ys_stacked).
+    """
+    if remat == "full":
+        body = jax.checkpoint(body)
+    if remat == "nested" and n_layers >= 4:
+        outer, inner = _nested_factors(n_layers)
+        if inner > 1:
+            def regroup(leaf):
+                return leaf.reshape((outer, inner) + leaf.shape[1:])
+
+            xs_r = jax.tree.map(regroup, xs)
+
+            @jax.checkpoint
+            def inner_scan(carry, xs_slice):
+                return jax.lax.scan(body, carry, xs_slice)
+
+            x, ys = jax.lax.scan(inner_scan, x0, xs_r)
+            ys = jax.tree.map(
+                lambda l: l.reshape((n_layers,) + l.shape[2:]), ys
+            )
+            return x, ys
+        body = jax.checkpoint(body)
+    return jax.lax.scan(body, x0, xs)

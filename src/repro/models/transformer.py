@@ -1,0 +1,313 @@
+"""Dense decoder-only transformer trunk.
+
+Covers the assigned dense/GQA architectures — deepseek-coder-33b,
+chatglm3-6b (partial rotary), llama3-405b, gemma3-1b (5:1 local:global,
+per-layer RoPE theta, sandwich norms) — and the qwen2-vl-2b text trunk
+(M-RoPE + stubbed patch-embedding injection).  The MoE models swap the MLP
+(see :mod:`repro.models.moe`); zamba2's shared attention block and
+whisper's encoder/decoder reuse the same attention layer.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint as lc
+from repro.models import embedding as emb
+from repro.models.attention import (
+    attention_specs,
+    decode_attention,
+    multihead_attention,
+    project_out,
+    project_qkv,
+)
+from repro.models.common import (
+    ParamSpec,
+    apply_rope,
+    layer_norm,
+    mlp_apply,
+    mlp_specs,
+    mrope_cos_sin,
+    rms_norm,
+    rope_cos_sin,
+)
+from repro.models.stack import scan_blocks, stack_specs
+
+
+def _norm(cfg: ModelConfig, params: dict, name: str, x: jax.Array) -> jax.Array:
+    if cfg.norm_type == "layer":
+        return layer_norm(x, params[name], params[f"{name}_bias"], cfg.norm_eps)
+    return rms_norm(x, params[name], cfg.norm_eps)
+
+
+def _norm_specs(cfg: ModelConfig, *names: str) -> dict:
+    d = cfg.d_model
+    specs: dict = {}
+    for n in names:
+        if cfg.norm_type == "layer":
+            specs[n] = ParamSpec((d,), ("p_none",), "ones")
+            specs[f"{n}_bias"] = ParamSpec((d,), ("p_none",), "zeros")
+        else:
+            specs[n] = ParamSpec((d,), ("p_none",), "zeros")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# one decoder layer
+# ---------------------------------------------------------------------------
+
+
+def dense_layer_specs(cfg: ModelConfig, mlp_fn=mlp_specs) -> dict:
+    specs = {
+        **attention_specs(cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim_,
+                          qk_norm=cfg.qk_norm),
+        "mlp": mlp_fn(cfg.d_model, cfg.d_ff, cfg.act),
+        **_norm_specs(cfg, "attn_norm", "mlp_norm"),
+    }
+    if cfg.sandwich_norm:
+        specs.update(_norm_specs(cfg, "post_attn_norm", "post_mlp_norm"))
+    return specs
+
+
+def _layer_rope(cfg: ModelConfig, positions, theta, precomputed):
+    """cos/sin for this layer — precomputed unless theta is per-layer."""
+    if precomputed is not None:
+        return precomputed
+    rotary_dim = int(cfg.head_dim_ * cfg.rotary_pct)
+    return rope_cos_sin(positions, rotary_dim, theta)
+
+
+def dense_block(cfg: ModelConfig, lp: dict, x: jax.Array, *,
+                positions: jax.Array, theta, window, cos_sin,
+                mode: str, cache_kv=None, kv_pos=None,
+                mlp_apply_fn=mlp_apply) -> tuple[jax.Array, Any]:
+    """One pre-norm attention + MLP block.  Returns (x, ys)."""
+    rotary_dim = int(cfg.head_dim_ * cfg.rotary_pct)
+    # pin the norm output to the residual's (seq-sharded, bf16) layout so
+    # SPMD reshards the small bf16 tensor, not the fp32 norm intermediate
+    h = lc(_norm(cfg, lp, "attn_norm", x), "batch", "seq", "embed")
+    q, k, v = project_qkv(lp, h, cfg.norm_eps)
+    if cfg.use_rope:
+        cos, sin = _layer_rope(cfg, positions, theta, cos_sin)
+        q = apply_rope(q, cos, sin, rotary_dim)
+        k = apply_rope(k, cos, sin, rotary_dim)
+
+    if mode == "decode":
+        ck, cv = cache_kv
+        attn = decode_attention(q, ck, cv, positions, kv_pos,
+                                window=window, softcap=cfg.attn_softcap,
+                                self_kv=(k, v))
+        ys = (k, v)
+    else:
+        attn = multihead_attention(q, k, v, positions, positions,
+                                   causal=True, window=window,
+                                   softcap=cfg.attn_softcap)
+        ys = (k, v) if mode == "prefill" else None
+
+    a = project_out(lp, attn)
+    if cfg.sandwich_norm:
+        a = _norm(cfg, lp, "post_attn_norm", a)
+    x = x + a
+
+    h2 = lc(_norm(cfg, lp, "mlp_norm", x), "batch", "seq", "embed")
+    m = mlp_apply_fn(lp["mlp"], h2, cfg.act)
+    if cfg.sandwich_norm:
+        m = _norm(cfg, lp, "post_mlp_norm", m)
+    x = x + m
+    return lc(x, "batch", "seq", "embed"), ys
+
+
+# ---------------------------------------------------------------------------
+# per-layer static metadata (gemma3 local/global pattern)
+# ---------------------------------------------------------------------------
+
+
+def layer_meta(cfg: ModelConfig, n_layers: int):
+    """(theta, window) arrays of shape (L,) — traced through the scan."""
+    import numpy as np
+
+    theta = np.full(n_layers, cfg.rope_theta, np.float32)
+    window = np.zeros(n_layers, np.int32)         # 0 → full attention
+    if cfg.window and not cfg.local_global_period:
+        window[:] = cfg.window                    # uniform SWA (mixtral)
+    if cfg.local_global_period:
+        for l in range(n_layers):
+            is_global = (l + 1) % cfg.local_global_period == 0
+            window[l] = 0 if is_global else cfg.window
+            if cfg.rope_theta_global and is_global:
+                theta[l] = cfg.rope_theta_global
+    return jnp.asarray(theta), jnp.asarray(window)
+
+
+def _per_layer_rope(cfg: ModelConfig) -> bool:
+    return bool(cfg.rope_theta_global and cfg.local_global_period)
+
+
+def _window_arg(cfg: ModelConfig, w):
+    """None (static: no window math) when the arch never uses windows."""
+    return w if (cfg.window or cfg.local_global_period) else None
+
+
+# ---------------------------------------------------------------------------
+# full trunk
+# ---------------------------------------------------------------------------
+
+
+def dense_specs(cfg: ModelConfig, mlp_fn=mlp_specs) -> dict:
+    return {
+        **emb.embedding_specs(cfg),
+        "layers": stack_specs(dense_layer_specs(cfg, mlp_fn), cfg.n_layers),
+    }
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Rolling ring buffer iff *every* layer is windowed (mixtral SWA)."""
+    if cfg.window and not cfg.local_global_period:
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """ShapeDtypeStruct tree for the decode cache (dry-run input specs)."""
+    S = cache_len(cfg, seq_len)
+    L, n, hd = cfg.n_layers, cfg.n_kv, cfg.head_dim_
+    dt = jnp.dtype(cfg.compute_dtype)
+    return {
+        "k": jax.ShapeDtypeStruct((L, batch, S, n, hd), dt),
+        "v": jax.ShapeDtypeStruct((L, batch, S, n, hd), dt),
+        "kv_pos": jax.ShapeDtypeStruct((batch, S), jnp.int32),
+        "cur": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _cache_constraint(cache: dict) -> dict:
+    out = dict(cache)
+    for key in ("k", "v"):
+        if key in cache:
+            out[key] = lc(cache[key], "layers", "batch", "kv_seq", "kv_heads",
+                          "head_dim")
+    if "kv_pos" in cache:
+        out["kv_pos"] = lc(cache["kv_pos"], "batch", "kv_seq")
+    return out
+
+
+def _inject_vision(cfg: ModelConfig, x: jax.Array, batch: dict) -> jax.Array:
+    """VLM stub: the first n_img positions carry precomputed patch embeds."""
+    if cfg.frontend == "vision" and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(x.dtype)
+        n = img.shape[1]
+        x = jnp.concatenate([img, x[:, n:]], axis=1)
+        x = lc(x, "batch", "seq", "embed")
+    return x
+
+
+def dense_apply(cfg: ModelConfig, params: dict, batch: dict, mode: str,
+                cache: dict | None = None, mlp_apply_fn=mlp_apply):
+    """Run the trunk.
+
+    train   → hidden states (b, s, d) after final norm
+    prefill → (last-position logits (b, V), fresh cache)
+    decode  → (logits (b, sq, V), updated cache)
+    """
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = emb.embed(cfg, params, tokens)
+    x = _inject_vision(cfg, x, batch)
+
+    if mode == "decode":
+        assert cache is not None
+        positions = jnp.broadcast_to(cache["cur"], (b, s)).astype(jnp.int32)
+    else:
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        positions = lc(positions, "batch", "q_seq")
+
+    # rope tables (precomputed unless per-layer theta)
+    cos_sin = None
+    if cfg.use_rope and not _per_layer_rope(cfg):
+        rotary_dim = int(cfg.head_dim_ * cfg.rotary_pct)
+        if cfg.mrope_sections:
+            cos_sin = mrope_cos_sin(batch["mrope_positions"], rotary_dim,
+                                    cfg.rope_theta, cfg.mrope_sections)
+        else:
+            cos_sin = rope_cos_sin(positions, rotary_dim, cfg.rope_theta)
+
+    theta_l, window_l = layer_meta(cfg, cfg.n_layers)
+    if cache is not None:
+        cache = _cache_constraint(cache)
+
+    layer_specs = dense_layer_specs(
+        cfg, (lambda d, f, a: {}) if cfg.family == "moe" else mlp_specs)
+    gather_skip = ("mlp",) if cfg.family == "moe" else ()
+
+    def body(carry, xs):
+        x = carry
+        if mode == "decode":
+            lp, th, w, ck, cv = xs
+            ck = lc(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+            cv = lc(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+            cache_kv = (ck, cv)
+            kv_pos = cache["kv_pos"]
+        else:
+            lp, th, w = xs
+            cache_kv, kv_pos = None, None
+        if cfg.layer_gather:
+            from repro.distributed.sharding import reshard_for_compute
+
+            lp = reshard_for_compute(lp, layer_specs, skip=gather_skip)
+        x, ys = dense_block(cfg, lp, x, positions=positions, theta=th,
+                            window=_window_arg(cfg, w), cos_sin=cos_sin,
+                            mode=mode, cache_kv=cache_kv, kv_pos=kv_pos,
+                            mlp_apply_fn=mlp_apply_fn)
+        return x, ys
+
+    xs: tuple = (params["layers"], theta_l, window_l)
+    if mode == "decode":
+        xs = xs + (cache["k"], cache["v"])
+    remat = cfg.remat if mode == "train" else "none"
+    x, ys = scan_blocks(body, x, xs, cfg.n_layers, remat)
+    x = emb.final_norm(cfg, params, x)
+
+    if mode == "train":
+        return x
+
+    if mode == "prefill":
+        k_all, v_all = ys                       # (L, b, s, n, hd)
+        S = cache_len(cfg, s)
+        if S != s:                               # rolling ring: last S tokens
+            slots = jnp.arange(S)
+            pos_of_slot = s - S + ((slots - s) % S)
+            k_all = jnp.take(k_all, pos_of_slot, axis=2)
+            v_all = jnp.take(v_all, pos_of_slot, axis=2)
+            kv_pos = jnp.broadcast_to(pos_of_slot, (b, S)).astype(jnp.int32)
+        else:
+            kv_pos = positions
+        new_cache = _cache_constraint({
+            "k": k_all.astype(jnp.dtype(cfg.compute_dtype)),
+            "v": v_all.astype(jnp.dtype(cfg.compute_dtype)),
+            "kv_pos": kv_pos,
+            "cur": jnp.asarray(s, jnp.int32),
+        })
+        logits = emb.logits_fn(cfg, params, x[:, -1])
+        return logits, new_cache
+
+    # decode: scatter the new kv into the ring once, outside the layer scan
+    k_new, v_new = ys                           # (L, b, sq, n, hd)
+    S = cache["k"].shape[2]
+    write_idx = (cache["cur"] % S).astype(jnp.int32)
+    k_c = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, 0, write_idx, 0, 0))
+    v_c = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, 0, write_idx, 0, 0))
+    kv_pos = jax.lax.dynamic_update_slice(
+        cache["kv_pos"], jnp.broadcast_to(cache["cur"], (b, 1)).astype(jnp.int32),
+        (0, write_idx))
+    new_cache = _cache_constraint(
+        {"k": k_c, "v": v_c, "kv_pos": kv_pos, "cur": cache["cur"] + 1})
+    logits = emb.logits_fn(cfg, params, x[:, -1])
+    return logits, new_cache

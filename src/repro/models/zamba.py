@@ -1,0 +1,176 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared-weight* attention block
+applied at a fixed period (zamba2-7b: 81 layers, every 6th is the shared
+transformer block → 13 applications of one weight set + 68 Mamba2 blocks).
+
+Layout: the layer stack is factored into ``n_units`` scan groups of
+(period−1 Mamba2 blocks + 1 shared attention block) plus a scanned Mamba2
+tail — the shared block's weights are closure constants of the scan body
+(weight sharing is exactly what makes that legal).  Simplifications vs the
+HF reference (noted in DESIGN.md): one shared block instead of two
+alternating ones, and the shared block sees the residual stream only (no
+concat with the original embedding).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import logical_constraint as lc
+from repro.models import embedding as emb
+from repro.models.common import ParamSpec, rms_norm
+from repro.models.mamba2 import mamba2_block, mamba2_specs, mamba2_state_specs
+from repro.models.stack import scan_blocks, stack_specs
+from repro.models.transformer import cache_len, dense_block, dense_layer_specs
+
+
+def _unit_shape(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_units, mamba_per_unit, tail) — e.g. 81 = 13×(5+1) + 3."""
+    period = cfg.hybrid_period
+    n_units = cfg.n_layers // period
+    per_unit = period - 1
+    tail = cfg.n_layers - n_units * period
+    return n_units, per_unit, tail
+
+
+def _mamba_layer_specs(cfg: ModelConfig) -> dict:
+    return {
+        "norm": ParamSpec((cfg.d_model,), ("p_none",), "zeros"),
+        "mamba": mamba2_specs(cfg),
+    }
+
+
+def zamba_specs(cfg: ModelConfig) -> dict:
+    n_units, per_unit, tail = _unit_shape(cfg)
+    specs = {
+        **emb.embedding_specs(cfg),
+        "units": stack_specs(stack_specs(_mamba_layer_specs(cfg), per_unit),
+                             n_units),
+        "shared_attn": dense_layer_specs(cfg),     # ONE copy, reused n_units×
+    }
+    if tail:
+        specs["tail"] = stack_specs(_mamba_layer_specs(cfg), tail)
+    return specs
+
+
+def _zero_states(cfg: ModelConfig, batch: int, *lead: int):
+    m = mamba2_state_specs(cfg, batch)
+    return jax.tree.map(
+        lambda sd: jnp.zeros(tuple(lead) + sd.shape, sd.dtype), m)
+
+
+def zamba_cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    n_units, per_unit, tail = _unit_shape(cfg)
+    S = cache_len(cfg, seq_len)
+    n, hd = cfg.n_kv, cfg.head_dim_
+    dt = jnp.dtype(cfg.compute_dtype)
+    m = mamba2_state_specs(cfg, batch)
+
+    def stack(tree, *lead):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(tuple(lead) + s.shape, s.dtype), tree)
+
+    cache = {
+        "mamba_units": stack(m, n_units, per_unit),
+        "attn_k": jax.ShapeDtypeStruct((n_units, batch, S, n, hd), dt),
+        "attn_v": jax.ShapeDtypeStruct((n_units, batch, S, n, hd), dt),
+        "kv_pos": jax.ShapeDtypeStruct((batch, S), jnp.int32),
+        "cur": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    if tail:
+        cache["mamba_tail"] = stack(m, tail)
+    return cache
+
+
+def zamba_apply(cfg: ModelConfig, params: dict, batch: dict, mode: str,
+                cache: dict | None = None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = emb.embed(cfg, params, tokens)
+    n_units, per_unit, tail = _unit_shape(cfg)
+    carry_state = mode in ("prefill", "decode")
+
+    if mode == "decode":
+        positions = jnp.broadcast_to(cache["cur"], (b, s)).astype(jnp.int32)
+        kv_pos = cache["kv_pos"]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        positions = lc(positions, "batch", "q_seq")
+        kv_pos = None
+
+    theta = jnp.asarray(cfg.rope_theta, jnp.float32)
+    shared = params["shared_attn"]
+    remat = cfg.remat if mode == "train" else "none"
+
+    def mamba_body(x, xs):
+        lp, st = xs
+        h = rms_norm(x, lp["norm"], cfg.norm_eps)
+        out, new_st = mamba2_block(cfg, lp["mamba"], h, mode=mode, state=st)
+        x = lc(x + out, "batch", "seq", "embed")
+        return x, (new_st if carry_state else None)
+
+    def mamba_scan(x, stacked, states, n):
+        return scan_blocks(mamba_body, x, (stacked, states), n, remat)
+
+    def unit_body(x, xs):
+        unit_params, unit_states, ck, cv = xs
+        x, new_m = mamba_scan(x, unit_params, unit_states, per_unit)
+        cache_kv = (ck, cv) if mode == "decode" else None
+        x, attn_ys = dense_block(
+            cfg, shared, x, positions=positions, theta=theta,
+            window=None, cos_sin=None, mode=mode,
+            cache_kv=cache_kv, kv_pos=kv_pos)
+        ys = (new_m, attn_ys) if carry_state else None
+        return x, ys
+
+    if mode == "decode":
+        m_states = cache["mamba_units"]
+        ck, cv = cache["attn_k"], cache["attn_v"]
+    else:
+        m_states = _zero_states(cfg, b, n_units, per_unit)
+        ck = jnp.zeros((n_units, b, 1, cfg.n_kv, cfg.head_dim_), x.dtype)
+        cv = jnp.zeros_like(ck)
+    x, unit_ys = scan_blocks(unit_body, x, (params["units"], m_states, ck, cv),
+                             n_units, remat)
+
+    tail_ys = None
+    if tail:
+        t_states = (cache["mamba_tail"] if mode == "decode"
+                    else _zero_states(cfg, b, tail))
+        x, tail_ys = mamba_scan(x, params["tail"], t_states, tail)
+
+    x = emb.final_norm(cfg, params, x)
+    if mode == "train":
+        return x
+
+    new_m_units, attn_kv = unit_ys
+    k_all, v_all = attn_kv                      # (n_units, b, sq, n, hd)
+    dt = jnp.dtype(cfg.compute_dtype)
+    if mode == "prefill":
+        new_cache = {
+            "mamba_units": new_m_units,
+            "attn_k": k_all.astype(dt),
+            "attn_v": v_all.astype(dt),
+            "kv_pos": positions,
+            "cur": jnp.asarray(s, jnp.int32),
+        }
+    else:
+        S = cache["attn_k"].shape[2]
+        idx = (cache["cur"] % S).astype(jnp.int32)
+        new_cache = {
+            "mamba_units": new_m_units,
+            "attn_k": jax.lax.dynamic_update_slice(
+                cache["attn_k"], k_all.astype(dt), (0, 0, idx, 0, 0)),
+            "attn_v": jax.lax.dynamic_update_slice(
+                cache["attn_v"], v_all.astype(dt), (0, 0, idx, 0, 0)),
+            "kv_pos": jax.lax.dynamic_update_slice(
+                cache["kv_pos"],
+                jnp.broadcast_to(cache["cur"], (b, 1)).astype(jnp.int32),
+                (0, idx)),
+            "cur": cache["cur"] + 1,
+        }
+    if tail:
+        new_cache["mamba_tail"] = tail_ys
+    logits = emb.logits_fn(cfg, params, x[:, -1])
+    return logits, new_cache

@@ -1,0 +1,24 @@
+"""repro.optim — sharded AdamW, schedules, gradient compression."""
+
+from repro.optim.adamw import AdamW, AdamWState, QTensor, dequantize_q8, quantize_q8
+from repro.optim.compression import (
+    EFState,
+    compress_bf16,
+    compress_int8,
+    init_error_feedback,
+)
+from repro.optim.schedule import constant, warmup_cosine
+
+__all__ = [
+    "AdamW",
+    "AdamWState",
+    "EFState",
+    "QTensor",
+    "compress_bf16",
+    "compress_int8",
+    "constant",
+    "dequantize_q8",
+    "init_error_feedback",
+    "quantize_q8",
+    "warmup_cosine",
+]

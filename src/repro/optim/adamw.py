@@ -1,0 +1,163 @@
+"""Sharded AdamW with selectable optimizer-state precision.
+
+States inherit the parameters' (ZeRO-style) shardings — m/v for a
+``('data','model')``-sharded weight are sharded identically, so optimizer
+memory scales 1/chips like the weights.  For the ≥300b archs the states are
+stored 8-bit (per-block absmax int8, bitsandbytes-style) or bf16 — a
+distributed-memory trick selected per arch via ``cfg.opt_state_dtype``.
+
+``grad_transform`` hooks in gradient compression (see
+:mod:`repro.optim.compression`).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+_BLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# int8 per-block quantized tensor
+# ---------------------------------------------------------------------------
+
+
+class QTensor(NamedTuple):
+    """Per-block absmax int8 quantization of a float tensor.
+
+    Blocks run along the LAST axis only, with a block size that divides the
+    last dim even when it is sharded up to 16 ways — the reshape then never
+    crosses shard boundaries, so quantize/dequantize stays fully sharded
+    under SPMD (a flat-reshape variant forced full-stack all-gathers of the
+    fp32 states; see EXPERIMENTS.md §Perf iteration 1c)."""
+
+    q: jax.Array        # int8, original shape
+    scale: jax.Array    # float32, x.shape[:-1] + (last // block,)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return jnp.int8
+
+
+def _block_for(last: int, max_shards: int = 16) -> int:
+    """Largest block ≤ _BLOCK dividing the per-shard slice of the last dim."""
+    unit = last // max_shards if last % max_shards == 0 else last
+    for b in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if b <= _BLOCK and unit % b == 0:
+            return b
+    return 1
+
+
+def quantize_q8(x: jax.Array) -> QTensor:
+    x = x.astype(jnp.float32)
+    last = x.shape[-1] if x.ndim else 1
+    b = _block_for(max(last, 1))
+    blocks = x.reshape(x.shape[:-1] + (last // b, b))
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[..., None]), -127, 127)
+    return QTensor(q=q.astype(jnp.int8).reshape(x.shape), scale=scale)
+
+
+def dequantize_q8(t: QTensor) -> jax.Array:
+    last = t.q.shape[-1] if t.q.ndim else 1
+    nb = t.scale.shape[-1]
+    b = max(last // max(nb, 1), 1)
+    blocks = t.q.astype(jnp.float32).reshape(t.q.shape[:-1] + (nb, b))
+    return (blocks * t.scale[..., None]).reshape(t.q.shape)
+
+
+def _encode(x: jax.Array, mode: str):
+    if mode == "int8":
+        return quantize_q8(x)
+    if mode == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    return x.astype(jnp.float32)
+
+
+def _decode(x, mode: str) -> jax.Array:
+    if mode == "int8":
+        return dequantize_q8(x)
+    return jnp.asarray(x, jnp.float32) if x.dtype != jnp.float32 else x
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any           # tree (float32 / bfloat16 / QTensor per leaf)
+    v: Any
+
+
+class AdamW(NamedTuple):
+    lr: Any = 3e-4                 # float or callable(step) -> float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: _encode(jnp.zeros(p.shape, jnp.float32), self.state_dtype),
+            params,
+        )
+        zeros_v = jax.tree.map(
+            lambda p: _encode(jnp.zeros(p.shape, jnp.float32), self.state_dtype),
+            params,
+        )
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros_v)
+
+    def update(self, grads, state: AdamWState, params,
+               grad_transform=None):
+        """Returns (new_params, new_state).  Decay excluded for 1-D leaves
+        (norms / biases), the usual convention."""
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+
+        # global-norm clip (fp32)
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip:
+            gn = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(g32)))
+            scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gn, 1e-9))
+            g32 = jax.tree.map(lambda g: g * scale, g32)
+
+        c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        is_q = lambda x: isinstance(x, QTensor)
+
+        def upd(p, g, m_enc, v_enc):
+            m = self.b1 * _decode(m_enc, self.state_dtype) + (1 - self.b1) * g
+            v = self.b2 * _decode(v_enc, self.state_dtype) + (1 - self.b2) * g * g
+            mh, vh = m / c1, v / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if p.ndim >= 2 and self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, _encode(m, self.state_dtype), _encode(v, self.state_dtype)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(g32)
+        flat_m = jax.tree.flatten(state.m, is_leaf=is_q)[0]
+        flat_v = jax.tree.flatten(state.v, is_leaf=is_q)[0]
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v)

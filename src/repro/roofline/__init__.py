@@ -1,0 +1,5 @@
+"""repro.roofline — three-term roofline from compiled dry-run artifacts."""
+
+from repro.roofline.analysis import Roofline, analyze, collective_bytes, model_flops
+
+__all__ = ["Roofline", "analyze", "collective_bytes", "model_flops"]

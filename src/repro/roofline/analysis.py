@@ -1,0 +1,156 @@
+"""Roofline-term extraction from a compiled (dry-run) artifact.
+
+Three terms per (arch × shape × mesh), all in seconds (DESIGN.md §8):
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_operand_bytes_per_device / ICI_BW
+
+``cost_analysis`` yields per-device FLOPs/bytes for the SPMD-partitioned
+module; collective bytes are parsed from the optimized HLO text (XLA does
+not report them in cost_analysis).  The dominant term is the bottleneck
+the §Perf loop iterates on; ``MODEL_FLOPS / HLO_FLOPs`` flags
+remat/replication waste.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+from repro.roofline import hw
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# dtype[dims]{layout} or dtype[dims] tokens, e.g. bf16[16,512]{1,0}
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?:\([^)]*\)|[a-z0-9\[\],{}:\s]+?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+
+
+def _token_bytes(dtype: str, dims: str) -> int:
+    if dtype not in hw.DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * hw.DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-opcode operand bytes summed over the module (per-device)."""
+    out: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # avoid double counting start/done async pairs
+        op = m.group(1)
+        # operands are inside the call parens; output type precedes the op
+        try:
+            args = line.split(m.group(0)[-len(op) - 1:], 1)[1]
+        except Exception:
+            args = line
+        paren = args[args.find("(") + 1: args.rfind(")")] if "(" in args else args
+        toks = _SHAPE_RE.findall(paren)
+        if not toks:  # fall back to the output type (lhs of '=')
+            toks = _SHAPE_RE.findall(line.split("=", 1)[0])
+        out[op] += sum(_token_bytes(dt, dims) for dt, dims in toks)
+    return out
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    chips: int
+    coll_breakdown: dict = field(default_factory=dict)
+    raw_cost_analysis: dict = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / hw.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / hw.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_device / hw.ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "coll_bytes_per_device": self.coll_bytes_per_device,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "coll_breakdown": self.coll_breakdown,
+            "raw_cost_analysis": self.raw_cost_analysis,
+        }
+
+
+def analyze(compiled, chips: int) -> Roofline:
+    """Loop-aware totals from the optimized HLO (see hlo_cost.py) —
+    ``compiled.cost_analysis()`` counts scan bodies once, so its raw
+    numbers are kept only as a reference field."""
+    from repro.roofline.hlo_cost import HloCost
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returned [dict]
+        cost = cost[0]
+    text = compiled.as_text()
+    hc = HloCost(text, n_partitions=chips)
+    tot = hc.total()
+    roof = Roofline(
+        flops_per_device=tot.flops,
+        bytes_per_device=tot.bytes,
+        coll_bytes_per_device=tot.coll_bytes,
+        chips=chips,
+        coll_breakdown=dict(tot.coll_by_op),
+    )
+    roof.raw_cost_analysis = {
+        "flops_once": float(cost.get("flops", 0.0)),
+        "bytes_once": float(cost.get("bytes accessed", 0.0)),
+    }
+    return roof
+
+
+def model_flops(cfg, shape, steps: int = 1) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) training FLOPs for the cell;
+    forward-only kinds use 2·N·D."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens * steps
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens * steps
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n_active * tokens * steps

@@ -1,0 +1,36 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — unit tests must see the
+real single-device CPU; multi-device tests spawn subprocesses with
+``--xla_force_host_platform_device_count`` themselves."""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560) -> str:
+    """Run a python snippet in a subprocess with n fake CPU devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_distance_matrix(rng, n: int, dim: int = 4,
+                           squared: bool = False) -> np.ndarray:
+    X = rng.normal(size=(n, dim))
+    D = ((X[:, None, :] - X[None, :, :]) ** 2).sum(-1)
+    return D if squared else np.sqrt(D)

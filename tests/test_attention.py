@@ -1,0 +1,118 @@
+"""Attention core vs naive reference: GQA, windows, softcap, decode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import decode_attention, multihead_attention
+
+
+def ref_attn(q, k, v, q_pos, k_pos, causal=True, window=None, softcap=0.0):
+    b, sq, h, d = q.shape
+    n = k.shape[2]
+    g = h // n
+    qg = q.reshape(b, sq, n, g, d).astype(np.float64) / np.sqrt(d)
+    s = np.einsum("bqngd,bknd->bngqk", qg, k.astype(np.float64))
+    if softcap:
+        s = np.tanh(s / softcap) * softcap
+    valid = k_pos[:, None, :] >= 0
+    if causal:
+        valid = valid & (q_pos[:, :, None] >= k_pos[:, None, :])
+    if window:
+        valid = valid & ((q_pos[:, :, None] - k_pos[:, None, :]) < window)
+    s = np.where(valid[:, None, None, :, :], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = np.einsum("bngqk,bknd->bngqd", p, v.astype(np.float64))
+    return np.moveaxis(o, 3, 1).reshape(b, sq, h, d)
+
+
+@pytest.fixture
+def qkv(rng):
+    b, s, h, n, d = 2, 64, 8, 4, 16
+    q = rng.normal(size=(b, s, h, d)).astype(np.float32)
+    k = rng.normal(size=(b, s, n, d)).astype(np.float32)
+    v = rng.normal(size=(b, s, n, d)).astype(np.float32)
+    pos = np.broadcast_to(np.arange(s), (b, s)).astype(np.int32)
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, 0.0), (True, 16, 0.0), (False, None, 0.0),
+    (True, None, 30.0), (True, 8, 50.0),
+])
+def test_vs_reference(qkv, causal, window, cap):
+    q, k, v, pos = qkv
+    got = np.asarray(multihead_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        jnp.asarray(pos), jnp.asarray(pos),
+        causal=causal, window=window, softcap=cap))
+    want = ref_attn(q, k, v, pos, pos, causal, window, cap)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_traced_window_matches_static(qkv):
+    """gemma3 passes the window as a traced per-layer value."""
+    q, k, v, pos = qkv
+    static = np.asarray(multihead_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        jnp.asarray(pos), jnp.asarray(pos), window=16))
+    traced = np.asarray(jax.jit(
+        lambda w: multihead_attention(
+            jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+            jnp.asarray(pos), jnp.asarray(pos), window=w)
+    )(jnp.asarray(16, jnp.int32)))
+    np.testing.assert_allclose(static, traced, rtol=1e-5, atol=1e-5)
+
+
+def test_decode_with_self_kv(rng):
+    """decode_attention(cache, self_kv) == reference over cache ∪ self."""
+    b, S, h, n, d = 2, 48, 8, 4, 16
+    cur = 33
+    kc = rng.normal(size=(b, S, n, d)).astype(np.float32)
+    vc = rng.normal(size=(b, S, n, d)).astype(np.float32)
+    kv_pos = np.where(np.arange(S) < cur, np.arange(S), -1).astype(np.int32)
+    kv_pos = np.broadcast_to(kv_pos, (b, S)).copy()
+    q1 = rng.normal(size=(b, 1, h, d)).astype(np.float32)
+    k1 = rng.normal(size=(b, 1, n, d)).astype(np.float32)
+    v1 = rng.normal(size=(b, 1, n, d)).astype(np.float32)
+    qp = np.full((b, 1), cur, np.int32)
+    got = np.asarray(decode_attention(
+        jnp.asarray(q1), jnp.asarray(kc), jnp.asarray(vc),
+        jnp.asarray(qp), jnp.asarray(kv_pos),
+        self_kv=(jnp.asarray(k1), jnp.asarray(v1))))
+    # reference: concat the self token into the cache
+    kk = np.concatenate([kc, k1], axis=1)
+    vv = np.concatenate([vc, v1], axis=1)
+    pp = np.concatenate([kv_pos, qp], axis=1)
+    want = ref_attn(q1, kk, vv, qp, pp, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_decode_non_causal_cross(rng):
+    """Whisper cross-attention: every encoder position visible."""
+    b, S, h, d = 2, 40, 4, 16
+    kc = rng.normal(size=(b, S, h, d)).astype(np.float32)
+    vc = rng.normal(size=(b, S, h, d)).astype(np.float32)
+    pos = np.broadcast_to(np.arange(S), (b, S)).astype(np.int32)
+    q1 = rng.normal(size=(b, 1, h, d)).astype(np.float32)
+    qp = np.full((b, 1), 2, np.int32)    # small q_pos must NOT mask cross
+    got = np.asarray(decode_attention(
+        jnp.asarray(q1), jnp.asarray(kc), jnp.asarray(vc),
+        jnp.asarray(qp), jnp.asarray(pos), causal=False))
+    want = ref_attn(q1, kc, vc, qp, pos, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_gradients_finite(qkv):
+    q, k, v, pos = qkv
+
+    def f(q_, k_, v_):
+        return multihead_attention(q_, k_, v_, jnp.asarray(pos),
+                                   jnp.asarray(pos)).sum()
+
+    grads = jax.grad(f, argnums=(0, 1, 2))(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    for g in grads:
+        assert np.isfinite(np.asarray(g)).all()

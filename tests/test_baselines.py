@@ -1,0 +1,41 @@
+"""Baselines: K-means (the paper's partitional comparison) + MST."""
+
+import jax
+import numpy as np
+
+from repro.core.baselines import kmeans, mst_single_linkage
+from repro.data.synthetic import gaussian_mixture
+
+
+def _purity(labels, truth, k):
+    p = 0
+    for c in range(k):
+        m = truth[labels == c]
+        if len(m):
+            p += np.bincount(m).max()
+    return p / len(truth)
+
+
+def test_kmeans_recovers_mixture():
+    X, y = gaussian_mixture(0, 300, 8, k=5, spread=8.0)
+    res = kmeans(jax.random.PRNGKey(0), X, k=5, iters=40)
+    assert _purity(np.asarray(res.labels), y, 5) > 0.95
+    assert float(res.inertia) > 0
+
+
+def test_kmeans_inertia_decreases_with_k():
+    X, _ = gaussian_mixture(1, 200, 6, k=4)
+    i2 = float(kmeans(jax.random.PRNGKey(0), X, k=2).inertia)
+    i8 = float(kmeans(jax.random.PRNGKey(0), X, k=8).inertia)
+    assert i8 < i2
+
+
+def test_mst_structure(rng):
+    X = rng.normal(size=(30, 4))
+    D = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
+    m = mst_single_linkage(D)
+    from repro.core.dendrogram import validate_merges
+
+    validate_merges(m)
+    # heights are sorted (Kruskal order)
+    assert (np.diff(m[:, 2]) >= -1e-9).all()

@@ -1,0 +1,70 @@
+"""Dendrogram post-processing: linkage matrix, cuts, invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core import dendrogram as dg
+from repro.core.lance_williams import lance_williams
+from tests.conftest import random_distance_matrix
+
+
+def _merges(rng, n=20, method="complete"):
+    D = random_distance_matrix(rng, n)
+    return np.asarray(lance_williams(D, method=method).merges)
+
+
+def test_cut_extremes(rng):
+    m = _merges(rng)
+    n = m.shape[0] + 1
+    labels_n = dg.cut(m, n)
+    assert sorted(labels_n) == list(range(n))       # every point its own
+    labels_1 = dg.cut(m, 1)
+    assert (labels_1 == 0).all()                    # one big cluster
+
+
+def test_cut_counts(rng):
+    m = _merges(rng)
+    for k in (2, 3, 7):
+        labels = dg.cut(m, k)
+        assert len(np.unique(labels)) == k
+
+
+def test_cut_nesting(rng):
+    """Cuts are hierarchical: the k-cluster partition refines k-1."""
+    m = _merges(rng)
+    for k in (2, 4, 8):
+        fine = dg.cut(m, k)
+        coarse = dg.cut(m, k - 1)
+        # every fine cluster maps into exactly one coarse cluster
+        for c in np.unique(fine):
+            assert len(np.unique(coarse[fine == c])) == 1
+
+
+def test_monotone_for_reducible(rng):
+    for method in ("single", "complete", "average", "ward"):
+        D = random_distance_matrix(rng, 24,
+                                   squared=method == "ward")
+        m = np.asarray(lance_williams(D, method=method).merges)
+        assert dg.is_monotone(m), method
+
+
+def test_linkage_matrix_ids(rng):
+    m = _merges(rng, n=10)
+    Z = dg.to_linkage_matrix(m)
+    n = 10
+    seen = set()
+    for t in range(n - 1):
+        a, b = int(Z[t, 0]), int(Z[t, 1])
+        assert a not in seen and b not in seen      # each cluster merged once
+        seen.update((a, b))
+        assert Z[t, 3] >= 2
+    assert Z[-1, 3] == n
+
+
+def test_validate_merges_catches_corruption(rng):
+    m = _merges(rng, n=8)
+    bad = m.copy()
+    bad[2, 0], bad[2, 1] = bad[1, 0], bad[1, 1]     # merge a dead slot again
+    bad[1, 1] = bad[1, 0]
+    with pytest.raises(AssertionError):
+        dg.validate_merges(bad)

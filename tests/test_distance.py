@@ -1,0 +1,67 @@
+"""Distance builders — incl. the RMSD (Kabsch) rigid-motion invariance that
+the paper's protein pipeline depends on."""
+
+import numpy as np
+
+from repro.core.distance import (
+    kabsch_rmsd,
+    pairwise_cosine,
+    pairwise_euclidean,
+    pairwise_rmsd,
+    pairwise_sq_euclidean,
+)
+
+
+def _rand_rot(rng):
+    q, _ = np.linalg.qr(rng.normal(size=(3, 3)))
+    if np.linalg.det(q) < 0:
+        q[:, 0] *= -1
+    return q
+
+
+def test_sq_euclidean_matches_numpy(rng):
+    X = rng.normal(size=(40, 7)).astype(np.float32)
+    want = ((X[:, None, :] - X[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(np.asarray(pairwise_sq_euclidean(X)), want,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(pairwise_euclidean(X)),
+                               np.sqrt(want), rtol=1e-3, atol=1e-3)
+
+
+def test_cosine_range_and_self(rng):
+    X = rng.normal(size=(20, 5)).astype(np.float32)
+    D = np.asarray(pairwise_cosine(X))
+    assert (D >= -1e-5).all() and (D <= 2 + 1e-5).all()
+    np.testing.assert_allclose(np.diag(D), 0.0, atol=1e-5)
+
+
+def test_rmsd_zero_under_rigid_motion(rng):
+    """RMSD(A, R·A + t) == 0 — the Kabsch superposition property."""
+    A = rng.normal(size=(17, 3)).astype(np.float32)
+    B = A @ _rand_rot(rng).T + rng.normal(size=(1, 3)) * 5
+    assert float(kabsch_rmsd(A, B.astype(np.float32))) < 1e-3
+
+
+def test_rmsd_detects_reflection(rng):
+    """Reflections are NOT allowed: mirrored conformation has rmsd > 0."""
+    A = rng.normal(size=(17, 3)).astype(np.float32)
+    B = A.copy()
+    B[:, 0] *= -1
+    assert float(kabsch_rmsd(A, B)) > 0.1
+
+
+def test_rmsd_scales_with_noise(rng):
+    A = rng.normal(size=(30, 3)).astype(np.float32)
+    small = A + rng.normal(size=A.shape).astype(np.float32) * 0.01
+    big = A + rng.normal(size=A.shape).astype(np.float32) * 0.5
+    assert float(kabsch_rmsd(A, small)) < float(kabsch_rmsd(A, big))
+
+
+def test_pairwise_rmsd_symmetric(rng):
+    confs = rng.normal(size=(8, 11, 3)).astype(np.float32)
+    D = np.asarray(pairwise_rmsd(confs))
+    np.testing.assert_allclose(D, D.T, atol=1e-5)
+    np.testing.assert_allclose(np.diag(D), 0.0, atol=1e-4)
+    # spot-check one off-diagonal against the pair function
+    want = float(kabsch_rmsd(confs[2], confs[5]))
+    np.testing.assert_allclose(D[2, 5], want, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,72 @@
+"""Serial engine vs the two independent oracles, all 7 linkage methods."""
+
+import numpy as np
+import pytest
+
+from repro.core.dendrogram import validate_merges
+from repro.core.lance_williams import lance_williams
+from repro.core.naive import definition_oracle, naive_lw
+from tests.conftest import random_distance_matrix
+
+METHODS = ("single", "complete", "average", "weighted", "centroid", "median",
+           "ward")
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("n", (8, 25, 50))
+def test_matches_numpy_mirror(method, n, rng):
+    D = random_distance_matrix(rng, n, squared=method in
+                               ("centroid", "median", "ward"))
+    got = np.asarray(lance_williams(D, method=method).merges)
+    want = naive_lw(D, method=method)
+    np.testing.assert_array_equal(got[:, :2], want[:, :2])
+    np.testing.assert_allclose(got[:, 2], want[:, 2], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(got[:, 3], want[:, 3])
+    validate_merges(got)
+
+
+@pytest.mark.parametrize("method", ("single", "complete", "average"))
+def test_matches_definition_oracle(method, rng):
+    """The recurrence reproduces each linkage's *definition* (not just the
+    numpy port of itself)."""
+    D = random_distance_matrix(rng, 18)
+    got = np.asarray(lance_williams(D, method=method).merges)
+    want = definition_oracle(D, method=method)
+    np.testing.assert_array_equal(got[:, :2], want[:, :2])
+    np.testing.assert_allclose(got[:, 2], want[:, 2], rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("method", ("centroid", "ward"))
+def test_geometric_methods_match_points_oracle(method, rng):
+    X = rng.normal(size=(15, 3))
+    D = ((X[:, None, :] - X[None, :, :]) ** 2).sum(-1)
+    got = np.asarray(lance_williams(D, method=method).merges)
+    want = definition_oracle(D, method=method, X=X)
+    np.testing.assert_array_equal(got[:, :2], want[:, :2])
+    np.testing.assert_allclose(got[:, 2], want[:, 2], rtol=1e-3, atol=1e-4)
+
+
+def test_accepts_upper_triangle(rng):
+    D = random_distance_matrix(rng, 12)
+    up = np.triu(D, 1)
+    full = np.asarray(lance_williams(D, "complete").merges)
+    tri = np.asarray(lance_williams(up, "complete").merges)
+    np.testing.assert_allclose(full, tri, rtol=1e-5)
+
+
+def test_two_points():
+    D = np.array([[0.0, 3.0], [3.0, 0.0]])
+    m = np.asarray(lance_williams(D, "complete").merges)
+    assert m.shape == (1, 4)
+    np.testing.assert_allclose(m[0], [0, 1, 3.0, 2.0])
+
+
+def test_chain_structure():
+    """Points on a line: single linkage merges neighbours in order."""
+    x = np.array([0.0, 1.0, 2.1, 3.3, 4.6])[:, None]
+    D = np.abs(x - x.T)
+    m = np.asarray(lance_williams(D, "single").merges)
+    # first merge is the closest pair (0,1) at distance 1.0
+    np.testing.assert_allclose(m[0, :3], [0, 1, 1.0])
+    # heights are the sorted gaps
+    np.testing.assert_allclose(np.sort(m[:, 2]), [1.0, 1.1, 1.2, 1.3])

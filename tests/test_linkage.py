@@ -1,0 +1,62 @@
+"""Unit tests for the Lance-Williams coefficient table (paper Table 1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.linkage import METHODS, coefficients, update_row
+
+
+def test_single_complete_signs():
+    for method, g in (("single", -0.5), ("complete", 0.5)):
+        a_i, a_j, b, gam = coefficients(method, 1.0, 1.0, jnp.ones(3))
+        np.testing.assert_allclose(a_i, 0.5)
+        np.testing.assert_allclose(a_j, 0.5)
+        np.testing.assert_allclose(b, 0.0)
+        np.testing.assert_allclose(gam, g)
+
+
+def test_average_weights_by_size():
+    a_i, a_j, b, g = coefficients("average", 3.0, 1.0, jnp.ones(2))
+    np.testing.assert_allclose(a_i, 0.75)
+    np.testing.assert_allclose(a_j, 0.25)
+
+
+def test_ward_depends_on_spectator():
+    n_k = jnp.asarray([1.0, 2.0, 5.0])
+    a_i, a_j, b, g = coefficients("ward", 2.0, 3.0, n_k)
+    np.testing.assert_allclose(a_i, (2 + n_k) / (5 + n_k))
+    np.testing.assert_allclose(b, -n_k / (5 + n_k))
+
+
+def test_centroid_beta():
+    a_i, a_j, b, g = coefficients("centroid", 2.0, 2.0, jnp.ones(1))
+    np.testing.assert_allclose(b, -0.25)
+
+
+def test_median_constants():
+    a_i, a_j, b, g = coefficients("median", 7.0, 1.0, jnp.ones(1))
+    np.testing.assert_allclose([float(a_i[0]), float(a_j[0]), float(b[0])],
+                               [0.5, 0.5, -0.25])
+
+
+def test_unknown_method_raises():
+    with pytest.raises(ValueError):
+        coefficients("nope", 1, 1, jnp.ones(1))
+
+
+def test_update_row_single_complete_are_min_max():
+    """single → min(d_ki, d_kj); complete → max(d_ki, d_kj)."""
+    d_ki = jnp.asarray([1.0, 5.0, 2.0])
+    d_kj = jnp.asarray([4.0, 3.0, 2.0])
+    lo = update_row("single", d_ki, d_kj, 0.7, 1, 1, jnp.ones(3))
+    hi = update_row("complete", d_ki, d_kj, 0.7, 1, 1, jnp.ones(3))
+    np.testing.assert_allclose(lo, jnp.minimum(d_ki, d_kj), rtol=1e-6)
+    np.testing.assert_allclose(hi, jnp.maximum(d_ki, d_kj), rtol=1e-6)
+
+
+def test_all_methods_finite():
+    for m in METHODS:
+        out = update_row(m, jnp.ones(4) * 2, jnp.ones(4), 0.5, 2.0, 3.0,
+                         jnp.arange(1.0, 5.0))
+        assert np.isfinite(np.asarray(out)).all(), m

@@ -1,0 +1,146 @@
+"""Per-arch smoke tests (reduced configs, CPU): one forward/train step with
+shape + finiteness asserts, and decode-vs-full-forward consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import model_api
+from repro.models.embedding import logits_fn
+
+B, S = 2, 24
+
+
+def _train_batch(cfg, rng, seq=S):
+    if cfg.family == "encdec":
+        return {
+            "audio_feats": jnp.asarray(
+                rng.normal(size=(B, seq, cfg.d_model)), jnp.float32),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, 16)),
+                                  jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, 16)),
+                                  jnp.int32),
+        }
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, seq)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, seq)), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_img_tokens, cfg.d_model)), jnp.float32)
+        batch["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(seq, dtype=jnp.int32), (3, B, seq))
+    return batch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_train_step_shapes_and_finite(arch, rng):
+    cfg = get_config(arch, reduced=True)
+    params = model_api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _train_batch(cfg, rng)
+    hidden = model_api.apply(cfg, params, batch, "train")
+    t = 16 if cfg.family == "encdec" else S
+    assert hidden.shape == (B, t, cfg.d_model)
+    assert np.isfinite(np.asarray(hidden, np.float32)).all()
+    loss = model_api.loss(cfg, params, batch)
+    assert np.isfinite(float(loss))
+    # random-init loss should be near ln(vocab)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.5
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_consistent_with_full_forward(arch, rng):
+    cfg = get_config(arch, reduced=True)
+    if cfg.family == "moe":
+        cfg = cfg.replace(capacity_factor=8.0)   # no capacity drops
+    params = model_api.init_params(cfg, jax.random.PRNGKey(0))
+
+    if cfg.family == "encdec":
+        af = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+        T = 8
+        dtoks = jnp.asarray(rng.integers(0, cfg.vocab, (B, T + 1)), jnp.int32)
+        hid = model_api.apply(cfg, params,
+                              {"audio_feats": af, "tokens": dtoks}, "train")
+        want = logits_fn(cfg, params, hid[:, T])
+        _, cache = model_api.apply(
+            cfg, params, {"audio_feats": af, "tokens": dtoks[:, :1]},
+            "prefill")
+        got = None
+        for t in range(1, T + 1):
+            got, cache = model_api.apply(
+                cfg, params, {"tokens": dtoks[:, t:t + 1]}, "decode", cache)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+        return
+
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S + 1)), jnp.int32)
+    batch_tr = {"tokens": toks}
+    extras = {}
+    if cfg.family == "vlm":
+        extras["image_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_img_tokens, cfg.d_model)), jnp.float32)
+        batch_tr.update(extras)
+        batch_tr["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S + 1, dtype=jnp.int32), (3, B, S + 1))
+    hid = model_api.apply(cfg, params, batch_tr, "train")
+    want = logits_fn(cfg, params, hid[:, S])
+
+    pre = {"tokens": toks[:, :S], **extras}
+    if cfg.family == "vlm":
+        pre["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32), (3, B, S))
+    _, cache = model_api.apply(cfg, params, pre, "prefill")
+    dec = {"tokens": toks[:, S:S + 1]}
+    if cfg.family == "vlm":
+        dec["mrope_positions"] = jnp.full((3, B, 1), S, jnp.int32)
+    got, cache2 = model_api.apply(cfg, params, dec, "decode", cache)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    # cache bookkeeping advanced
+    assert int(cache2["cur"]) == int(cache["cur"]) + 1
+
+
+def test_rolling_window_cache_is_ring(rng):
+    """Mixtral SWA: cache length == window, old slots overwritten."""
+    cfg = get_config("mixtral-8x7b", reduced=True).replace(
+        capacity_factor=8.0)
+    assert cfg.window == 16
+    params = model_api.init_params(cfg, jax.random.PRNGKey(0))
+    n_total = 24  # > window
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, n_total)), jnp.int32)
+    _, cache = model_api.apply(cfg, params, {"tokens": toks[:, :20]}, "prefill")
+    assert cache["k"].shape[2] == cfg.window
+    got, cache = model_api.apply(cfg, params, {"tokens": toks[:, 20:21]},
+                                 "decode", cache)
+    # full-forward reference at position 20 (window masks older context)
+    hid = model_api.apply(cfg, params, {"tokens": toks[:, :21]}, "train")
+    want = logits_fn(cfg, params, hid[:, 20])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gemma_local_global_pattern():
+    from repro.models.transformer import layer_meta
+
+    cfg = get_config("gemma3-1b", reduced=True)
+    theta, window = layer_meta(cfg, cfg.n_layers)
+    w = np.asarray(window)
+    th = np.asarray(theta)
+    assert (w[np.arange(cfg.n_layers) % cfg.local_global_period ==
+              cfg.local_global_period - 1] == 0).all()   # global layers
+    assert (th[w == 0] == cfg.rope_theta_global).all()
+    assert (w[w != 0] == cfg.window).all()
+
+
+def test_moe_capacity_drops_are_bounded(rng):
+    """With cf=1.0 exactly t·k/E slots exist; outputs stay finite and the
+    combine weights of dropped tokens are zeroed (output norm shrinks, not
+    explodes)."""
+    cfg = get_config("mixtral-8x7b", reduced=True).replace(
+        capacity_factor=1.0)
+    params = model_api.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _train_batch(cfg, rng)
+    loss = model_api.loss(cfg, params, batch)
+    assert np.isfinite(float(loss))

@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dendrogram as dg
+from repro.core.baselines import mst_single_linkage
+from repro.core.lance_williams import lance_williams
+from repro.core.naive import naive_lw
+
+
+def _points(draw, nmin=4, nmax=20, dim=3):
+    n = draw(st.integers(nmin, nmax))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, dim))
+
+
+def _distmat(X):
+    return np.sqrt(((X[:, None, :] - X[None, :, :]) ** 2).sum(-1))
+
+
+def _canon(labels):
+    m: dict = {}
+    return tuple(m.setdefault(x, len(m)) for x in labels)
+
+
+@st.composite
+def points(draw):
+    return _points(draw)
+
+
+@settings(max_examples=25, deadline=None)
+@given(points())
+def test_merge_list_structurally_valid(X):
+    for method in ("single", "complete", "average"):
+        m = np.asarray(lance_williams(_distmat(X), method=method).merges)
+        dg.validate_merges(m)
+
+
+@settings(max_examples=20, deadline=None)
+@given(points(), st.integers(0, 2**31 - 1))
+def test_permutation_invariance(X, perm_seed):
+    """Complete-linkage partitions don't depend on input order."""
+    n = X.shape[0]
+    k = max(2, n // 4)
+    rng = np.random.default_rng(perm_seed)
+    perm = rng.permutation(n)
+    l1 = dg.cut(np.asarray(
+        lance_williams(_distmat(X), "complete").merges), k)
+    l2 = dg.cut(np.asarray(
+        lance_williams(_distmat(X[perm]), "complete").merges), k)
+    # labels of permuted run, mapped back to original order
+    l2_back = np.empty(n, np.int64)
+    l2_back[perm] = l2
+    # same partition up to relabeling
+    pairs1 = {(i, j) for i in range(n) for j in range(i + 1, n)
+              if l1[i] == l1[j]}
+    pairs2 = {(i, j) for i in range(n) for j in range(i + 1, n)
+              if l2_back[i] == l2_back[j]}
+    assert pairs1 == pairs2
+
+
+@settings(max_examples=20, deadline=None)
+@given(points())
+def test_heights_monotone_reducible(X):
+    D = _distmat(X)
+    for method in ("single", "complete", "average", "weighted"):
+        m = np.asarray(lance_williams(D, method=method).merges)
+        assert dg.is_monotone(m), method
+
+
+@settings(max_examples=20, deadline=None)
+@given(points())
+def test_single_linkage_equals_mst(X):
+    """LW(single) and Prim's-MST produce identical partitions at every k —
+    the Hendrix-style specialized algorithm cross-validates the recurrence."""
+    D = _distmat(X)
+    n = X.shape[0]
+    m_lw = np.asarray(lance_williams(D, "single").merges)
+    m_mst = mst_single_linkage(D)
+    np.testing.assert_allclose(np.sort(m_lw[:, 2]), np.sort(m_mst[:, 2]),
+                               rtol=1e-4, atol=1e-5)
+    for k in (1, 2, max(2, n // 2)):
+        assert _canon(dg.cut(m_lw, k)) == _canon(dg.cut(m_mst, k))
+
+
+@settings(max_examples=15, deadline=None)
+@given(points())
+def test_scaling_invariance(X):
+    """Scaling all distances scales heights, keeps merge order."""
+    D = _distmat(X)
+    m1 = np.asarray(lance_williams(D, "complete").merges)
+    m2 = np.asarray(lance_williams(D * 7.5, "complete").merges)
+    np.testing.assert_array_equal(m1[:, :2], m2[:, :2])
+    np.testing.assert_allclose(m2[:, 2], m1[:, 2] * 7.5, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(points())
+def test_jax_equals_numpy_engine(X):
+    D = _distmat(X)
+    for method in ("complete", "ward"):
+        Din = D ** 2 if method == "ward" else D
+        got = np.asarray(lance_williams(Din, method=method).merges)
+        want = naive_lw(Din, method=method)
+        np.testing.assert_array_equal(got[:, :2], want[:, :2])
