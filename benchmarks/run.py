@@ -7,14 +7,23 @@ Paper artifact → bench mapping:
   Table 1 (all linkage methods)        → bench_linkage
   beyond-paper engine (rowmin)         → bench_variants
   kernel hot-spots                     → bench_kernels
+  batched multi-problem engine         → bench_batch (EXPERIMENTS.md §Batch)
   (arch × shape) roofline table        → roofline_report (reads dryrun.jsonl)
 
 Default sizes are CI-scale; pass --paper for the paper-scale n=1968 run.
 """
 
 import argparse
+import os
 import sys
 import traceback
+
+# make `import benchmarks` / `import repro` work when invoked as
+# `python benchmarks/run.py` without PYTHONPATH
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def main() -> None:
@@ -25,6 +34,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
+        bench_batch,
         bench_kernels,
         bench_linkage,
         bench_scaling,
@@ -40,6 +50,8 @@ def main() -> None:
         "kernels": lambda: bench_kernels.main(),
         "variants": lambda: bench_variants.main(
             n=384 if not args.paper else 1024, p=4),
+        "batch": lambda: bench_batch.main(
+            B=64, n=128 if not args.paper else 256),
         "scaling": lambda: bench_scaling.main(
             n=n_scale, procs=(1, 2, 4, 8) if not args.paper
             else (1, 2, 4, 8, 16)),

@@ -1,0 +1,34 @@
+"""Shims over the moving parts of the jax API surface.
+
+The repo targets the modern spelling (``jax.shard_map``, ``jax.lax.pvary``)
+but must also run on the jax 0.4.x line baked into CI images, where
+``shard_map`` still lives in ``jax.experimental`` and ``pvary`` does not
+exist (0.4.x ``shard_map`` does not track varying-vs-replicated manual
+axes, so the shim is a no-op there).  Import these names from here, never
+from jax directly:
+
+    from repro.compat import pvary, shard_map
+"""
+
+from __future__ import annotations
+
+try:  # jax >= 0.6
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+    def shard_map(f, **kwargs):
+        # 0.4.x replication checking has no rule for while/fori loops (our
+        # engines' shape); every caller here returns values that are
+        # replicated by construction (pmax/psum epilogues), so disabling
+        # the check is sound.
+        kwargs.setdefault("check_rep", False)
+        return _shard_map(f, **kwargs)
+
+try:  # jax >= 0.6
+    from jax.lax import pvary  # type: ignore[attr-defined]
+except ImportError:  # jax 0.4.x: no replication tracking — identity is correct
+    def pvary(x, axis_name):  # noqa: ARG001 - signature mirrors jax.lax.pvary
+        return x
+
+__all__ = ["pvary", "shard_map"]

@@ -1,16 +1,27 @@
 """repro.core — the paper's contribution: (distributed) Lance-Williams
-hierarchical agglomerative clustering."""
+hierarchical agglomerative clustering, single-problem and batched."""
 
-from repro.core.api import ClusterResult, build_distance_matrix, cluster
+from repro.core.api import (
+    BatchResult,
+    ClusterResult,
+    build_distance_matrix,
+    cluster,
+    cluster_batch,
+)
+from repro.core.batched import BatchStats, cluster_batch_merges
 from repro.core.lance_williams import LWResult, lance_williams, lance_williams_from_points
 from repro.core.linkage import METHODS, coefficients, update_row
 
 __all__ = [
     "METHODS",
+    "BatchResult",
+    "BatchStats",
     "ClusterResult",
     "LWResult",
     "build_distance_matrix",
     "cluster",
+    "cluster_batch",
+    "cluster_batch_merges",
     "coefficients",
     "lance_williams",
     "lance_williams_from_points",

@@ -10,12 +10,13 @@ matrix and a label extractor — the paper's dendrogram, cut at any level.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Literal
+from typing import Literal, Sequence
 
 import jax
 import numpy as np
 
 from repro.core import dendrogram as dg
+from repro.core.batched import BatchStats, cluster_batch_merges
 from repro.core.distance import pairwise_euclidean, pairwise_rmsd, pairwise_sq_euclidean
 from repro.core.lance_williams import lance_williams
 from repro.core.linkage import METHODS
@@ -60,6 +61,25 @@ def build_distance_matrix(X, metric: str = "euclidean") -> jax.Array:
     raise ValueError(f"unknown metric {metric!r}")
 
 
+def _as_distance_matrix(data, method: str, metric: str | None):
+    """Shared input interpretation for ``cluster`` and ``cluster_batch``:
+    a square 2-D array with ``metric is None`` is already a distance
+    matrix; anything else is points embedded via *metric*, defaulting to
+    squared Euclidean for the geometric methods (scipy convention).
+
+    May return a jax array (built matrices stay on device for the
+    single-problem engines); ``cluster_batch`` converts to numpy for its
+    host-side bucket stacking."""
+    arr = np.asarray(data)
+    if metric is None and arr.ndim == 2 and arr.shape[0] == arr.shape[1]:
+        return arr
+    if metric is None:
+        metric = (
+            "sqeuclidean" if method in ("centroid", "median", "ward") else "euclidean"
+        )
+    return build_distance_matrix(arr, metric)
+
+
 def cluster(
     data,
     method: str = "complete",
@@ -80,16 +100,7 @@ def cluster(
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
 
-    arr = np.asarray(data)
-    is_matrix = metric is None and arr.ndim == 2 and arr.shape[0] == arr.shape[1]
-    if is_matrix:
-        D = arr
-    else:
-        if metric is None:
-            metric = (
-                "sqeuclidean" if method in ("centroid", "median", "ward") else "euclidean"
-            )
-        D = build_distance_matrix(arr, metric)
+    D = _as_distance_matrix(data, method, metric)
 
     if backend == "auto":
         backend = "distributed" if len(jax.devices()) > 1 else "serial"
@@ -110,3 +121,77 @@ def cluster(
         raise ValueError(f"unknown backend {backend!r}")
 
     return ClusterResult(merges=np.asarray(merges), method=method, backend=backend)
+
+
+@dataclass
+class BatchResult(Sequence):
+    """Results of a :func:`cluster_batch` call — one dendrogram per problem.
+
+    Sequence of :class:`ClusterResult` in input order, plus the scheduler's
+    :class:`~repro.core.batched.BatchStats` (shape buckets touched, padding
+    waste, engine used).
+    """
+
+    results: list[ClusterResult]
+    stats: BatchStats
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, idx):
+        return self.results[idx]
+
+    def labels(self, k: int) -> list[np.ndarray]:
+        """Per-problem flat labels for ``k`` clusters (k may exceed small
+        problems' n — those saturate at one-item clusters)."""
+        return [r.labels(min(k, r.n)) for r in self.results]
+
+
+def cluster_batch(
+    problems: Sequence,
+    method: str = "complete",
+    *,
+    metric: str | None = None,
+    backend: Backend = "auto",
+    mesh=None,
+) -> BatchResult:
+    """Cluster MANY independent problems in one compiled program each bucket.
+
+    ``problems`` is a sequence of independent inputs, each interpreted
+    exactly as :func:`cluster` interprets its ``data`` argument: an
+    ``(n, n)`` distance matrix when square and ``metric is None``, else
+    ``(n, d)`` points / ``(n, atoms, 3)`` conformations with a metric.
+    Problem sizes may be ragged — the scheduler pads them into shape
+    buckets (DESIGN.md §9) and runs one batched engine call per bucket.
+
+    backend: ``serial`` (vmap over problems on one device), ``distributed``
+    (whole problems sharded across mesh devices — *inter*-problem
+    parallelism, zero communication), ``kernel`` (Pallas batch-grid inner
+    loops), or ``auto`` (distributed iff >1 device).
+
+    For the ``serial`` and ``distributed`` backends every problem's merge
+    list is bit-identical to what the single-problem
+    ``cluster(problems[b], method, backend='serial')`` returns; the
+    ``kernel`` backend matches merge *indices* exactly with merge
+    distances equal to float tolerance (same contract as the
+    single-problem kernel backend).
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown linkage method {method!r}")
+    if backend == "auto":
+        backend = "distributed" if len(jax.devices()) > 1 else "serial"
+    if backend not in ("serial", "distributed", "kernel"):
+        raise ValueError(f"unknown backend {backend!r}")
+
+    matrices = [
+        np.asarray(_as_distance_matrix(data, method, metric)) for data in problems
+    ]
+
+    merge_lists, stats = cluster_batch_merges(
+        matrices, method, engine=backend, mesh=mesh
+    )
+    results = [
+        ClusterResult(merges=np.asarray(m), method=method, backend=backend)
+        for m in merge_lists
+    ]
+    return BatchResult(results=results, stats=stats)

@@ -34,6 +34,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import pvary, shard_map
+
 from repro.core.lance_williams import LWResult
 from repro.core.linkage import METHODS, update_row
 
@@ -76,8 +78,8 @@ def _lw_body(method: str, n_steps: int):
         f32 = jnp.float32
         # the carry mixes shard-varying (D_local) and replicated values; mark
         # everything varying and reduce the merge list back at the end.
-        alive0 = jax.lax.pvary(alive0, AXIS)
-        sizes0 = jax.lax.pvary(sizes0, AXIS)
+        alive0 = pvary(alive0, AXIS)
+        sizes0 = pvary(sizes0, AXIS)
 
         def step(t, state):
             D_local, alive, sizes, merges = state
@@ -137,7 +139,7 @@ def _lw_body(method: str, n_steps: int):
             )
             return (D_local, alive, sizes, merges)
 
-        merges0 = jax.lax.pvary(jnp.zeros((n_steps, 4), f32), AXIS)
+        merges0 = pvary(jnp.zeros((n_steps, 4), f32), AXIS)
         _, _, _, merges = jax.lax.fori_loop(
             0, n_steps, step, (D_local, alive0, sizes0, merges0)
         )
@@ -169,8 +171,8 @@ def _lw_body_rowmin(method: str, n_steps: int):
         cols = jnp.arange(n_pad)
         f32 = jnp.float32
 
-        alive0 = jax.lax.pvary(alive0, AXIS)
-        sizes0 = jax.lax.pvary(sizes0, AXIS)
+        alive0 = pvary(alive0, AXIS)
+        sizes0 = pvary(sizes0, AXIS)
 
         def rescan(D_local, alive, mask_rows):
             """Masked re-min of the flagged local rows (vectorized)."""
@@ -252,7 +254,7 @@ def _lw_body_rowmin(method: str, n_steps: int):
         Dm0 = jnp.where(valid0, D_local, jnp.inf)
         rmin0 = jnp.min(Dm0, axis=1)
         rarg0 = jnp.argmin(Dm0, axis=1)
-        merges0 = jax.lax.pvary(jnp.zeros((n_steps, 4), f32), AXIS)
+        merges0 = pvary(jnp.zeros((n_steps, 4), f32), AXIS)
         _, _, _, merges, _, _ = jax.lax.fori_loop(
             0,
             n_steps,
@@ -285,8 +287,8 @@ def _lw_body_lazy(method: str, n_steps: int, batch_k: int = 8):
         f32 = jnp.float32
         K = min(batch_k, rows)
 
-        alive0 = jax.lax.pvary(alive0, AXIS)
-        sizes0 = jax.lax.pvary(sizes0, AXIS)
+        alive0 = pvary(alive0, AXIS)
+        sizes0 = pvary(sizes0, AXIS)
 
         def row_min(D_local, alive, r_idx):
             """Masked min/argmin of local rows r_idx (K,) — O(K·n)."""
@@ -371,7 +373,7 @@ def _lw_body_lazy(method: str, n_steps: int, batch_k: int = 8):
         Dm0 = jnp.where(valid0, D_local, jnp.inf)
         rmin0 = jnp.min(Dm0, axis=1)
         rarg0 = jnp.argmin(Dm0, axis=1)
-        merges0 = jax.lax.pvary(jnp.zeros((n_steps, 4), f32), AXIS)
+        merges0 = pvary(jnp.zeros((n_steps, 4), f32), AXIS)
         _, _, _, merges, _, _ = jax.lax.fori_loop(
             0, n_steps, step,
             (D_local, alive0, sizes0, merges0, rmin0, rarg0))
@@ -387,7 +389,7 @@ _BODIES = {"baseline": _lw_body, "rowmin": _lw_body_rowmin,
 @partial(jax.jit, static_argnames=("method", "n_steps", "mesh", "variant"))
 def _run(D, alive0, sizes0, *, method: str, n_steps: int, mesh: Mesh, variant: str):
     body = _BODIES[variant](method, n_steps)
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(P(AXIS, None), P(), P()),
@@ -478,7 +480,7 @@ def distributed_pairwise(
 
     Xs = jax.device_put(X, NamedSharding(mesh, P(AXIS, *([None] * (X.ndim - 1)))))
     fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             body,
             mesh=mesh,
             in_specs=(P(AXIS, *([None] * (X.ndim - 1))),),

@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.linkage import METHODS
-from repro.kernels.lw_update import lw_update_pallas
-from repro.kernels.minscan import masked_argmin_pallas
+from repro.kernels.lw_update import lw_update_batch_pallas, lw_update_pallas
+from repro.kernels.minscan import masked_argmin_batch_pallas, masked_argmin_pallas
 from repro.kernels.pairwise import pairwise_sq_euclidean_pallas
 
 
@@ -137,3 +137,85 @@ def lance_williams_kernelized(D: jax.Array, method: str = "complete", *,
     merges0 = jnp.zeros((n - 1, 4), jnp.float32)
     _, _, _, merges = jax.lax.fori_loop(0, n - 1, step, (Dp, alive0, sizes0, merges0))
     return _KResult(merges=merges)
+
+
+@partial(jax.jit, static_argnames=("method", "n_steps", "block_m"))
+def lance_williams_kernelized_batch(
+    Db: jax.Array,
+    n_real: jax.Array,
+    *,
+    method: str = "complete",
+    n_steps: int,
+    block_m: int = 256,
+) -> jax.Array:
+    """Batched serial LW with Pallas inner loops over a *batch grid dim*.
+
+    ``Db`` is ``(B, n_pad, n_pad)`` stacked problems (slots ``>= n_real[b]``
+    dead from birth); both kernels run with ``grid=(B, slabs)`` so every
+    problem is processed by one compiled kernel launch per step.  Returns
+    the ``(B, n_steps, 4)`` merge buffer; rows past ``n_real[b] - 1`` are
+    zero (the ragged guard of the vmap engine, DESIGN.md §9).
+    """
+    from repro.core.batched import _prepare_batch
+
+    if method not in METHODS:
+        raise ValueError(f"unknown linkage method {method!r}")
+    Db = _prepare_batch(jnp.asarray(Db, jnp.float32))
+    B, n_pad = Db.shape[0], Db.shape[1]
+
+    # pad once so every kernel call inside the loop is lane-aligned
+    npad = n_pad + ((-n_pad) % 128)
+    bm = block_m if npad % block_m == 0 else 128
+    Dp = jnp.zeros((B, npad, npad), jnp.float32).at[:, :n_pad, :n_pad].set(Db)
+    alive0 = jnp.arange(npad)[None, :] < n_real[:, None]
+    sizes0 = alive0.astype(jnp.float32)
+    ks = jnp.arange(npad)
+    interp = _interpret()
+    f32 = jnp.float32
+
+    def step(t, state):
+        Dp, alive, sizes, merges = state
+        v, flat = masked_argmin_batch_pallas(
+            Dp, alive.astype(f32), block_m=bm, interpret=interp
+        )
+        r, c = flat // npad, flat % npad
+        i, j = jnp.minimum(r, c), jnp.maximum(r, c)          # (B,)
+        keep = alive & (ks[None, :] != i[:, None]) & (ks[None, :] != j[:, None])
+
+        take_col = lambda idx: jnp.take_along_axis(
+            Dp, idx[:, None, None], axis=2
+        )[:, :, 0]                                           # (B, npad)
+        take_sz = lambda idx: jnp.take_along_axis(sizes, idx[:, None], axis=1)[:, 0]
+        d_ki, d_kj = take_col(i), take_col(j)
+        n_i, n_j = take_sz(i), take_sz(j)
+        new = lw_update_batch_pallas(
+            method, d_ki, d_kj, v, n_i, n_j, sizes, keep,
+            block_n=min(2048, npad), interpret=interp,
+        )
+
+        def upd(D, ii, row):
+            return D.at[ii, :].set(row).at[:, ii].set(row).at[ii, ii].set(0.0)
+
+        Dp2 = jax.vmap(upd)(Dp, i, new)
+        new_size = n_i + n_j
+        alive2 = jax.vmap(lambda a, jj: a.at[jj].set(False))(alive, j)
+        sizes2 = jax.vmap(
+            lambda s, ii, jj, ns: s.at[ii].set(ns).at[jj].set(0.0)
+        )(sizes, i, j, new_size)
+        rec = jnp.stack([i.astype(f32), j.astype(f32), v, new_size], axis=1)
+        merges2 = merges.at[:, t, :].set(rec)
+
+        act = t < n_real - 1                                  # (B,) ragged guard
+        a1, a2, a3 = act[:, None, None], act[:, None], act[:, None, None]
+        return (
+            jnp.where(a1, Dp2, Dp),
+            jnp.where(a2, alive2, alive),
+            jnp.where(a2, sizes2, sizes),
+            jnp.where(a3, merges2, merges),
+        )
+
+    merges0 = jnp.zeros((B, n_steps, 4), f32)
+    _, _, _, merges = jax.lax.fori_loop(
+        0, n_steps, step, (Dp, alive0, sizes0, merges0)
+    )
+    return merges

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.distributed.sharding import current_mesh, current_rules, logical_constraint as lc
 from repro.models.common import ParamSpec, rms_norm
 
@@ -234,7 +235,7 @@ def multihead_attention(q, k, v, q_pos, k_pos, *, causal=True, window=None,
 
     body = partial(_local_attention, causal=causal, window=window,
                    softcap=softcap, gather_axis=gather_axis)
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(qspec, kspec, kspec, pspec, pspec),
         out_specs=qspec,
@@ -318,7 +319,7 @@ def decode_attention(q, k_cache, v_cache, q_pos, kv_pos, *, window=None,
     qspec = P(bspec, None, None, None)
     cspec = P(bspec, kvspec, None, None)
     sspec = P(bspec, None, None, None)
-    fn = jax.shard_map(
+    fn = shard_map(
         partial(_decode_body, window=window, softcap=softcap, kv_axes=kv_axes,
                 has_self=has_self, causal=causal),
         mesh=mesh,

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 from repro.distributed.sharding import current_mesh, current_rules
 from repro.models.common import ACTIVATIONS, ParamSpec
@@ -227,7 +228,7 @@ def moe_apply(params: dict, x: jax.Array, act: str = "silu", *,
              upspec, dnspec]
     if wg is None:
         args[2] = jnp.zeros((1, 1), x.dtype)  # placeholder, ungathered
-    fn = jax.shard_map(
+    fn = shard_map(
         lambda x_, wr_, wg_, wu_, wd_: body(
             x_, wr_, wg_ if wg is not None else None, wu_, wd_),
         mesh=mesh,

@@ -254,9 +254,17 @@ class HloCost:
 
         # ---- compute ---------------------------------------------------------
         if op == "dot":
-            # contraction size from lhs shape + lhs_contracting_dims
-            lhs_name = i.rest.split(",")[0].strip().lstrip("%").split(")")[0]
-            lhs = sym.get(lhs_name)
+            # contraction size from lhs shape + lhs_contracting_dims.  Newer
+            # XLA prints operands with inline types (``dot(f32[64,256]{1,0}
+            # %x, ...)``) — take the first inline shape; older text prints
+            # bare ``%x`` refs — fall back to the symbol table.
+            paren = i.rest.split(")")[0]
+            inline = _SHAPE.findall(paren)
+            if inline:
+                lhs = inline[0]
+            else:
+                lm = re.search(r"%([\w.\-]+)", paren)
+                lhs = sym.get(lm.group(1)) if lm else None
             kdim = 1
             mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", i.line)
             if lhs and mm and mm.group(1):

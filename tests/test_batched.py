@@ -1,0 +1,141 @@
+"""Batched engine vs the single-problem serial engine: identical merges.
+
+The acceptance bar for ``cluster_batch`` (DESIGN.md §9) is not "close":
+every problem in a batch must produce a merge list *identical* to what a
+Python loop of single-problem ``cluster(..., backend='serial')`` calls
+produces — across all linkage methods, ragged batch compositions, and
+engines.  The batched loop's pre-masked matrix / hierarchical-min
+optimizations are only admissible because of this equivalence.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import METHODS, cluster, cluster_batch
+from repro.core.batched import BUCKETS, bucket_batch, bucket_n
+from repro.core.dendrogram import validate_merges
+from tests.conftest import random_distance_matrix, run_with_devices
+
+RAGGED_NS = (5, 8, 13, 16, 3, 30)       # crosses the 8/16/32 buckets
+
+
+def _mats(rng, ns, method):
+    squared = method in ("centroid", "median", "ward")
+    return [random_distance_matrix(rng, n, squared=squared) for n in ns]
+
+
+def _loop(mats, method):
+    return [np.asarray(cluster(m, method, backend="serial").merges)
+            for m in mats]
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_serial_batch_identical_to_loop_all_methods(method, rng):
+    mats = _mats(rng, RAGGED_NS, method)
+    batch = cluster_batch(mats, method, backend="serial")
+    for got, want in zip(batch, _loop(mats, method)):
+        np.testing.assert_array_equal(got.merges, want)
+        validate_merges(got.merges)
+
+
+def test_batch_of_one(rng):
+    mats = _mats(rng, (11,), "complete")
+    batch = cluster_batch(mats, "complete", backend="serial")
+    assert len(batch) == 1
+    np.testing.assert_array_equal(batch[0].merges, _loop(mats, "complete")[0])
+
+
+def test_duplicate_points_and_exact_ties(rng):
+    """Exact-zero distances (dup docs) stress the min tie-breaking path."""
+    X = rng.normal(size=(12, 3))
+    X[4] = X[0]
+    X[9] = X[2]
+    D = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
+    for method in ("single", "complete", "average"):
+        batch = cluster_batch([D, D.copy()], method, backend="serial")
+        want = _loop([D], method)[0]
+        np.testing.assert_array_equal(batch[0].merges, want)
+        np.testing.assert_array_equal(batch[1].merges, want)
+
+
+def test_points_input_matches_cluster(rng):
+    """Points go through the same metric defaulting as cluster(...)."""
+    pts = [rng.normal(size=(n, 6)).astype(np.float32) for n in (7, 12, 20)]
+    for method in ("complete", "ward"):
+        batch = cluster_batch(pts, method, backend="serial")
+        for got, p in zip(batch, pts):
+            want = cluster(p, method, backend="serial").merges
+            np.testing.assert_array_equal(got.merges, np.asarray(want))
+
+
+def test_kernel_backend_matches_serial(rng):
+    """Pallas batch-grid inner loops (interpret mode on CPU)."""
+    for method in ("complete", "ward"):
+        mats = _mats(rng, (5, 9, 12), method)
+        batch = cluster_batch(mats, method, backend="kernel")
+        for got, want in zip(batch, _loop(mats, method)):
+            np.testing.assert_array_equal(got.merges[:, :2], want[:, :2])
+            np.testing.assert_allclose(got.merges, want, rtol=1e-5, atol=1e-6)
+
+
+def test_batch_result_api(rng):
+    mats = _mats(rng, (6, 10), "complete")
+    batch = cluster_batch(mats, "complete", backend="serial")
+    assert len(batch) == 2
+    assert [r.n for r in batch] == [6, 10]
+    labels = batch.labels(3)
+    assert [len(l) for l in labels] == [6, 10]
+    assert all(l.max() + 1 == 3 for l in labels)
+    assert batch.stats.engine == "serial"
+    assert sum(cnt for _, cnt in batch.stats.buckets) == 2
+    # n=6 -> bucket 8 (B_pad 1), n=10 -> bucket 16 (B_pad 1)
+    assert batch.stats.cells_padded == 8 * 8 + 16 * 16
+    assert batch.stats.cells_real == 6 * 6 + 10 * 10
+    assert 0.0 < batch.stats.pad_waste < 1.0
+    assert abs(batch.stats.pad_waste - (1 - 136 / 320)) < 1e-9
+
+
+def test_bucketing():
+    assert bucket_n(2) == 8 and bucket_n(8) == 8 and bucket_n(9) == 16
+    assert bucket_n(BUCKETS[-1]) == BUCKETS[-1]
+    with pytest.raises(ValueError):
+        bucket_n(BUCKETS[-1] + 1)
+    assert bucket_batch(1) == 1 and bucket_batch(5) == 8
+    assert bucket_batch(5, multiple_of=4) == 8
+    # non-power-of-two device counts must terminate and divide evenly
+    assert bucket_batch(1, multiple_of=3) % 3 == 0
+    assert bucket_batch(7, multiple_of=6) % 6 == 0
+
+
+def test_input_validation(rng):
+    with pytest.raises(ValueError, match="unknown linkage"):
+        cluster_batch([np.eye(4)], "nope")
+    with pytest.raises(ValueError, match="unknown backend"):
+        cluster_batch([random_distance_matrix(rng, 4)], backend="nope")
+    with pytest.raises(ValueError, match="at least 2"):
+        cluster_batch([np.zeros((1, 1))], metric=None)
+
+
+@pytest.mark.slow
+def test_distributed_batch_identical_to_loop():
+    """Whole-problem sharding over 4 fake devices, ragged batch."""
+    code = """
+import numpy as np, jax
+assert len(jax.devices()) == 4
+from repro.core import cluster, cluster_batch
+rng = np.random.default_rng(3)
+mats = []
+for n in (6, 11, 14, 7, 20, 5):
+    X = rng.normal(size=(n, 4))
+    mats.append(np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1)))
+for method in ("single", "complete", "ward"):
+    use = [m ** 2 for m in mats] if method == "ward" else mats
+    batch = cluster_batch(use, method)          # auto -> distributed
+    assert batch.stats.engine == "distributed"
+    for got, D in zip(batch, use):
+        want = np.asarray(cluster(D, method, backend="serial").merges)
+        assert np.array_equal(got.merges, want), method
+print("DISTRIBUTED_BATCH_OK")
+"""
+    out = run_with_devices(code, n_devices=4)
+    assert "DISTRIBUTED_BATCH_OK" in out

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dendrogram as dg
