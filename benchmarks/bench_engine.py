@@ -1,0 +1,107 @@
+"""Unified-engine matrix: variant × early-stop wall-clock on one backend set.
+
+The engine refactor (DESIGN.md §3) promoted the cached-row-minima argmin
+variants (``rowmin``/``lazy``) from distributed-only to every backend and
+added engine-level early termination.  This bench measures both knobs on
+the dense serial composition plus the batched vmap engine — the hot paths
+of the ``examples/`` dedup workloads:
+
+* ``serial_<variant>``      — single problem, full dendrogram.
+* ``serial_stop<k>``        — same problem, ``stop_at_k``: the merge loop
+  statically runs ``n - k`` trips instead of ``n - 1``.
+* ``serial_thr``            — ``distance_threshold`` at the median merge
+  height: a data-dependent ``while_loop`` exit.
+* ``batch_<variant>``       — B ragged problems through ``cluster_batch``.
+
+Runs in-process (single CPU device; the distributed variants' collective
+story lives in ``bench_variants.py``).  Every timed configuration is also
+checked for merge-prefix/bit-identity against the baseline full run, so
+the bench doubles as a smoke test (`--smoke` shrinks sizes for CI).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _timed(fn, reps: int = 3) -> float:
+    fn()                                    # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def main(n: int = 512, B: int = 32, smoke: bool = False) -> dict:
+    import jax
+
+    from repro.core import cluster, cluster_batch
+
+    if smoke:
+        n, B = 96, 8
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, 8)).astype(np.float32)
+    D = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
+    # genuinely ragged batch: sizes span n/16 .. n/4 (several shape buckets)
+    batch_ns = [int(rng.integers(max(4, n // 16), max(6, n // 4))) for _ in range(B)]
+    mats = []
+    for nb in batch_ns:
+        x = rng.normal(size=(nb, 8)).astype(np.float32)
+        mats.append(np.sqrt(((x[:, None] - x[None]) ** 2).sum(-1)))
+
+    full = cluster(D, "complete", backend="serial")
+    base = np.asarray(full.merges)
+    stop_k = max(2, n // 16)
+    thr = float(np.median(base[:, 2]))
+    times: dict[str, float] = {}
+
+    def run_serial(**kw):
+        res = cluster(D, "complete", backend="serial", **kw)
+        jax.block_until_ready(res.merges)
+        return res
+
+    for variant in ("baseline", "rowmin", "lazy"):
+        res = run_serial(variant=variant)
+        assert np.array_equal(np.asarray(res.merges), base), variant
+        times[f"serial_{variant}"] = _timed(lambda v=variant: run_serial(variant=v))
+
+    res = run_serial(stop_at_k=stop_k)
+    assert np.array_equal(np.asarray(res.merges), base[: n - stop_k])
+    times[f"serial_stop{stop_k}"] = _timed(lambda: run_serial(stop_at_k=stop_k))
+
+    res = run_serial(distance_threshold=thr)
+    nm = res.n_merges
+    assert np.array_equal(np.asarray(res.merges), base[:nm]) and base[nm, 2] > thr
+    times["serial_thr"] = _timed(
+        lambda: run_serial(distance_threshold=thr))
+
+    want = [np.asarray(cluster(m, "complete", backend="serial").merges)
+            for m in mats]
+    for variant in ("baseline", "rowmin"):
+        got = cluster_batch(mats, "complete", backend="serial", variant=variant)
+        assert all(np.array_equal(g.merges, w) for g, w in zip(got, want))
+        times[f"batch_{variant}"] = _timed(
+            lambda v=variant: cluster_batch(
+                mats, "complete", backend="serial", variant=v))
+
+    print("name,us_per_call,derived")
+    ref = times["serial_baseline"]
+    for name, sec in times.items():
+        print(f"engine_{name},{sec * 1e6:.0f},{ref / sec:.2f}x_vs_baseline")
+    print(f"engine_config,{n},B={B};stop_k={stop_k};thr=p50;"
+          f"smoke={int(smoke)};all_outputs_verified")
+    return times
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=512)
+    ap.add_argument("--B", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes; verifies the variant matrix still runs")
+    a = ap.parse_args()
+    main(n=a.n, B=a.B, smoke=a.smoke)

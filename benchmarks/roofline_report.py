@@ -4,10 +4,7 @@ from __future__ import annotations
 
 import json
 import os
-from collections import defaultdict
 
-from repro.configs import SHAPES, get_config
-from repro.roofline import analysis as ra
 
 
 def load(path: str = "results/dryrun.jsonl") -> dict:

@@ -6,6 +6,7 @@ Paper artifact → bench mapping:
   §5.4 storage claim O(n²/p)           → bench_storage
   Table 1 (all linkage methods)        → bench_linkage
   beyond-paper engine (rowmin)         → bench_variants
+  unified engine variant×early-stop    → bench_engine
   kernel hot-spots                     → bench_kernels
   batched multi-problem engine         → bench_batch (EXPERIMENTS.md §Batch)
   (arch × shape) roofline table        → roofline_report (reads dryrun.jsonl)
@@ -35,6 +36,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_batch,
+        bench_engine,
         bench_kernels,
         bench_linkage,
         bench_scaling,
@@ -50,6 +52,8 @@ def main() -> None:
         "kernels": lambda: bench_kernels.main(),
         "variants": lambda: bench_variants.main(
             n=384 if not args.paper else 1024, p=4),
+        "engine": lambda: bench_engine.main(
+            n=512 if not args.paper else 1968, B=32),
         "batch": lambda: bench_batch.main(
             B=64, n=128 if not args.paper else 256),
         "scaling": lambda: bench_scaling.main(

@@ -15,7 +15,6 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import cluster
-from repro.core.dendrogram import cut
 from repro.models import model_api
 
 rng = np.random.default_rng(0)

@@ -15,7 +15,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import ClusterResult, cluster
+from repro.core import cluster
 from repro.core.distributed import distributed_pairwise, make_cluster_mesh
 from repro.data.synthetic import conformations
 

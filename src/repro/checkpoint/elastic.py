@@ -14,7 +14,7 @@ from typing import Any
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def validate_mesh_for_tree(spec_tree, rules, mesh: Mesh) -> list[str]:

@@ -7,7 +7,7 @@ n ≈ 1968 items, swept over processor counts.  These constants drive
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -9,11 +9,13 @@ from repro.core.api import (
     cluster_batch,
 )
 from repro.core.batched import BatchStats, cluster_batch_merges
+from repro.core.engine import VARIANTS
 from repro.core.lance_williams import LWResult, lance_williams, lance_williams_from_points
-from repro.core.linkage import METHODS, coefficients, update_row
+from repro.core.linkage import METHODS, coefficients, default_metric, update_row
 
 __all__ = [
     "METHODS",
+    "VARIANTS",
     "BatchResult",
     "BatchStats",
     "ClusterResult",
@@ -23,6 +25,7 @@ __all__ = [
     "cluster_batch",
     "cluster_batch_merges",
     "coefficients",
+    "default_metric",
     "lance_williams",
     "lance_williams_from_points",
     "update_row",

@@ -5,6 +5,15 @@
 picks an engine (serial / distributed / Pallas-kernel inner loops) and
 returns a :class:`ClusterResult` with the merge list, a scipy-style linkage
 matrix and a label extractor — the paper's dendrogram, cut at any level.
+
+Every backend is a composition of the unified merge loop
+(:mod:`repro.core.engine`), so the engine-level knobs are uniform:
+``variant`` selects the argmin primitive (``baseline`` / ``rowmin`` /
+``lazy``) and ``stop_at_k`` / ``distance_threshold`` terminate the loop
+early — at ``k`` remaining clusters (statically fewer loop trips) and/or
+before the first merge whose distance exceeds the threshold.  An
+early-stopped result carries the exact prefix of the full run's merge
+list.
 """
 
 from __future__ import annotations
@@ -19,28 +28,39 @@ from repro.core import dendrogram as dg
 from repro.core.batched import BatchStats, cluster_batch_merges
 from repro.core.distance import pairwise_euclidean, pairwise_rmsd, pairwise_sq_euclidean
 from repro.core.lance_williams import lance_williams
-from repro.core.linkage import METHODS
+from repro.core.linkage import METHODS, default_metric
 
 Backend = Literal["auto", "serial", "distributed", "kernel"]
 
 
 @dataclass
 class ClusterResult:
-    merges: np.ndarray                 # (n-1, 4) slot-convention merge list
+    merges: np.ndarray                 # (n_merges, 4) slot-convention merge list
     method: str
     backend: str
+    n_leaves: int | None = None        # explicit n for early-stopped runs
     linkage_matrix: np.ndarray = field(init=False)
 
     def __post_init__(self) -> None:
-        self.linkage_matrix = dg.to_linkage_matrix(self.merges)
+        if self.n_leaves is None:
+            self.n_leaves = self.merges.shape[0] + 1
+        self.linkage_matrix = dg.to_linkage_matrix(self.merges, n=self.n_leaves)
 
     @property
     def n(self) -> int:
-        return self.merges.shape[0] + 1
+        return int(self.n_leaves)
+
+    @property
+    def n_merges(self) -> int:
+        return int(self.merges.shape[0])
 
     def labels(self, k: int) -> np.ndarray:
-        """Flat labels for ``k`` clusters (cut the dendrogram at level k)."""
-        return dg.cut(self.merges, k)
+        """Flat labels for ``k`` clusters (cut the dendrogram at level k).
+
+        An early-stopped run only holds ``n_merges`` merges, so ``k``
+        must be at least ``n - n_merges`` (the stop level).
+        """
+        return dg.cut(self.merges, k, n=self.n)
 
     def heights(self) -> np.ndarray:
         return dg.merge_heights(self.merges)
@@ -65,7 +85,7 @@ def _as_distance_matrix(data, method: str, metric: str | None):
     """Shared input interpretation for ``cluster`` and ``cluster_batch``:
     a square 2-D array with ``metric is None`` is already a distance
     matrix; anything else is points embedded via *metric*, defaulting to
-    squared Euclidean for the geometric methods (scipy convention).
+    :func:`repro.core.linkage.default_metric` (scipy convention).
 
     May return a jax array (built matrices stay on device for the
     single-problem engines); ``cluster_batch`` converts to numpy for its
@@ -74,9 +94,7 @@ def _as_distance_matrix(data, method: str, metric: str | None):
     if metric is None and arr.ndim == 2 and arr.shape[0] == arr.shape[1]:
         return arr
     if metric is None:
-        metric = (
-            "sqeuclidean" if method in ("centroid", "median", "ward") else "euclidean"
-        )
+        metric = default_metric(method)
     return build_distance_matrix(arr, metric)
 
 
@@ -88,6 +106,8 @@ def cluster(
     backend: Backend = "auto",
     mesh=None,
     variant: str = "baseline",
+    stop_at_k: int = 1,
+    distance_threshold: float | None = None,
 ) -> ClusterResult:
     """Hierarchically cluster *data* with the Lance-Williams engine.
 
@@ -96,31 +116,38 @@ def cluster(
     backend: ``serial`` (single device), ``distributed`` (paper's algorithm
         over all mesh devices), ``kernel`` (serial loop with Pallas inner
         ops), or ``auto`` (distributed iff >1 device).
+    variant / stop_at_k / distance_threshold: engine-level knobs shared
+        by every backend — argmin primitive and early termination.
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
 
     D = _as_distance_matrix(data, method, metric)
+    n = int(D.shape[0])
 
     if backend == "auto":
         backend = "distributed" if len(jax.devices()) > 1 else "serial"
 
+    stops = dict(stop_at_k=stop_at_k, distance_threshold=distance_threshold)
     if backend == "serial":
-        merges = lance_williams(D, method=method).merges
+        res = lance_williams(D, method=method, variant=variant, **stops)
     elif backend == "distributed":
         from repro.core.distributed import distributed_lance_williams
 
-        merges = distributed_lance_williams(
-            D, method=method, mesh=mesh, variant=variant
-        ).merges
+        res = distributed_lance_williams(
+            D, method=method, mesh=mesh, variant=variant, **stops
+        )
     elif backend == "kernel":
         from repro.kernels.ops import lance_williams_kernelized
 
-        merges = lance_williams_kernelized(D, method=method).merges
+        res = lance_williams_kernelized(
+            jax.numpy.asarray(D), method=method, variant=variant, **stops
+        )
     else:
         raise ValueError(f"unknown backend {backend!r}")
 
-    return ClusterResult(merges=np.asarray(merges), method=method, backend=backend)
+    merges = np.asarray(res.merges)[: int(res.n_merges)]
+    return ClusterResult(merges=merges, method=method, backend=backend, n_leaves=n)
 
 
 @dataclass
@@ -142,9 +169,20 @@ class BatchResult(Sequence):
         return self.results[idx]
 
     def labels(self, k: int) -> list[np.ndarray]:
-        """Per-problem flat labels for ``k`` clusters (k may exceed small
-        problems' n — those saturate at one-item clusters)."""
-        return [r.labels(min(k, r.n)) for r in self.results]
+        """Per-problem flat labels for ``k`` clusters.
+
+        ``k`` is clamped per problem to ``[1, n_b]`` (small problems
+        saturate at one-item clusters) and, for an early-stopped batch,
+        up to the stop level ``n_b - n_merges_b`` (the coarsest cut the
+        recorded prefix supports); ``k <= 0`` is a hard error — there is
+        no such thing as a non-positive cluster count.
+        """
+        if k <= 0:
+            raise ValueError(f"k must be a positive cluster count, got {k}")
+        return [
+            r.labels(max(1, min(k, r.n), r.n - r.n_merges))
+            for r in self.results
+        ]
 
 
 def cluster_batch(
@@ -154,6 +192,9 @@ def cluster_batch(
     metric: str | None = None,
     backend: Backend = "auto",
     mesh=None,
+    variant: str = "baseline",
+    stop_at_k: int = 1,
+    distance_threshold: float | None = None,
 ) -> BatchResult:
     """Cluster MANY independent problems in one compiled program each bucket.
 
@@ -166,15 +207,16 @@ def cluster_batch(
 
     backend: ``serial`` (vmap over problems on one device), ``distributed``
     (whole problems sharded across mesh devices — *inter*-problem
-    parallelism, zero communication), ``kernel`` (Pallas batch-grid inner
-    loops), or ``auto`` (distributed iff >1 device).
+    parallelism, zero communication), ``kernel`` (Pallas inner loops under
+    the vmap batching rule), or ``auto`` (distributed iff >1 device).
 
     For the ``serial`` and ``distributed`` backends every problem's merge
     list is bit-identical to what the single-problem
-    ``cluster(problems[b], method, backend='serial')`` returns; the
+    ``cluster(problems[b], method, backend='serial', ...)`` returns; the
     ``kernel`` backend matches merge *indices* exactly with merge
     distances equal to float tolerance (same contract as the
-    single-problem kernel backend).
+    single-problem kernel backend).  ``variant`` and the early-stop knobs
+    apply per problem.
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
@@ -188,10 +230,21 @@ def cluster_batch(
     ]
 
     merge_lists, stats = cluster_batch_merges(
-        matrices, method, engine=backend, mesh=mesh
+        matrices,
+        method,
+        engine=backend,
+        mesh=mesh,
+        variant=variant,
+        stop_at_k=stop_at_k,
+        distance_threshold=distance_threshold,
     )
     results = [
-        ClusterResult(merges=np.asarray(m), method=method, backend=backend)
-        for m in merge_lists
+        ClusterResult(
+            merges=np.asarray(m),
+            method=method,
+            backend=backend,
+            n_leaves=mat.shape[0],
+        )
+        for m, mat in zip(merge_lists, matrices)
     ]
     return BatchResult(results=results, stats=stats)

@@ -4,30 +4,32 @@ The paper scales ONE big problem across processors (``n²/p`` storage);
 production traffic is the transpose: *millions of small problems* (one
 dendrogram per user / per document shard / per protein family).  This
 module clusters a whole batch of independent problems in a single
-compiled program:
+compiled program.  All three engines are execution wrappers around the
+same unified merge loop (:mod:`repro.core.engine`):
 
-* **serial engine** — the padded LW merge loop under ``jax.vmap``: one
-  dispatch, one ``fori_loop``, every problem advancing in lockstep on one
-  device.
+* **serial engine** — ``jax.vmap`` of the dense composition: one
+  dispatch, one loop, every problem advancing in lockstep on one device.
 * **distributed engine** — whole problems assigned to mesh devices via
   ``shard_map`` (batch-axis sharding, ``P('p', None, None)``); each device
   vmaps over its local slice.  Zero inter-device communication — the
   embarrassingly parallel regime of Parallel D2-Clustering / clusterNOR,
   complementary to the paper's intra-problem sharding.
-* **kernel engine** — the same loop with the Pallas min-scan and LW-update
-  kernels invoked over a *batch grid dimension* (``grid=(B, n//bm)``), see
+* **kernel engine** — ``jax.vmap`` of the Pallas composition (the
+  ``pallas_call`` batching rule prepends the batch grid dimension), see
   :func:`repro.kernels.ops.lance_williams_kernelized_batch`.
 
 Ragged batches are padded into **shape buckets** (the ``configs/shapes.py``
 idiom: a small static grid of shapes so compiles are amortized): problem
 ``n`` is rounded up to the next bucket, the batch axis is rounded up to a
 power of two, and XLA's jit cache then guarantees one compile per
-``(bucket_n, bucket_B, method, engine)`` for the lifetime of the process.
-Padded slots are born dead (``alive=False``) and padded *problems* have
-``n_real=0``.  The vmap and shard_map engines emit merge lists
-bit-identical to the single-problem serial engine; the kernel engine
-matches merge indices exactly with distances equal to float tolerance
-(the single-problem kernel contract).
+``(bucket_n, bucket_B, method, engine, variant)`` for the lifetime of the
+process.  Padded slots are born dead (``alive=False``) and padded
+*problems* have ``n_real=0``.  The vmap and shard_map engines emit merge
+lists bit-identical to the single-problem serial engine; the kernel
+engine matches merge indices exactly with distances equal to float
+tolerance (the single-problem kernel contract).  The engine-level
+``variant`` / ``stop_at_k`` / ``distance_threshold`` knobs pass straight
+through to every engine.
 """
 
 from __future__ import annotations
@@ -41,7 +43,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.linkage import METHODS, update_row
+from repro.core.engine import AXIS, VARIANTS, LWResult, run_dense, symmetrize
+from repro.core.linkage import METHODS
 
 #: Static padded-n grid (shape buckets).  Problems are rounded up to the
 #: smallest bucket that fits; one compile per touched bucket.
@@ -89,172 +92,90 @@ class BatchStats:
 
 
 # ---------------------------------------------------------------------------
-# the padded per-problem merge loop (shared by the vmap + shard_map engines)
+# engines — one compiled program per (bucket_n, bucket_B, method, variant)
 # ---------------------------------------------------------------------------
 
 
-def _prepare_batch(Db: jax.Array) -> jax.Array:
-    """Per-problem symmetrize + zero diagonal, batched.
+def _vmap_engine(Db, n_real, threshold, *, method, n_steps, variant,
+                 with_threshold):
+    """The shared batched composition: symmetrize + vmap of ``run_dense``.
 
-    Element-for-element the same float32 ops as the single-problem
-    ``lance_williams._prepare`` (padding cells are zero and stay zero), so
-    downstream merge lists match the serial engine bit-for-bit.
+    Finished problems simply churn garbage merge rows (their matrices go
+    all-``+inf``) instead of paying a per-step ragged guard; the
+    scheduler slices those rows off.  With a ``distance_threshold`` the
+    loop is a ``while_loop`` whose vmap batching rule freezes finished
+    lanes — an exhausted (all-inf) problem reads ``dmin = +inf`` and
+    stops contributing work.  The threshold value is a traced operand
+    (closed over, unbatched) so per-call radii share one compile.
     """
-    Db = jnp.asarray(Db, jnp.float32)
-    n = Db.shape[-1]
-    eye = jnp.eye(n, dtype=bool)
-    upper = jnp.triu(Db, k=1)
-    has_lower = jnp.any(jnp.tril(Db, k=-1) != 0, axis=(-2, -1), keepdims=True)
-    full_sym = jnp.where(has_lower, Db, upper + jnp.swapaxes(upper, -2, -1))
-    return jnp.where(eye, 0.0, 0.5 * (full_sym + jnp.swapaxes(full_sym, -2, -1)))
+    Db = symmetrize(Db)
+    alive0 = jnp.arange(Db.shape[-1])[None, :] < n_real[:, None]
 
-
-def _lw_one_padded(method: str, n_steps: int, D: jax.Array, n_real: jax.Array):
-    """LW merge loop for ONE padded problem (vmapped by the engines).
-
-    ``D`` is ``(n_pad, n_pad)`` already prepared; slots ``>= n_real`` are
-    dead from birth.
-
-    Two throughput optimizations over the single-problem serial engine,
-    neither of which changes a single arithmetic input (merge lists stay
-    bit-identical — asserted in ``tests/test_batched.py``):
-
-    * **pre-masked matrix** — the liveness/diagonal mask is applied ONCE up
-      front and maintained *in place* (tombstoned rows/columns are
-      overwritten with ``+inf`` as they die) instead of being recomputed
-      from ``alive`` every step.  The per-step cost drops from ~6 full
-      ``O(B·n²)`` passes (mask build, where, argmin, ragged-guard selects)
-      to a single argmin pass plus ``O(B·n)`` row/column writes — on
-      CPU/HBM the batch buffer doesn't fit in cache, so passes ≈ runtime.
-      Live cells hold exactly the values the serial engine's masked view
-      holds; dead cells differ (``inf`` here, stale garbage there) but are
-      excluded from every read in both engines.
-    * **no per-step ragged guard** — vmap lanes are independent, so a
-      problem that has finished its ``n_real - 1`` real merges simply
-      churns garbage (its matrix is all-``inf``) without a
-      ``jnp.where(act, ...)`` select over the full matrix.  Garbage merge
-      rows land only at ``t >= n_real - 1``, which the scheduler slices
-      off before anything reads them.
-    * **select-based row/column rewrite** — the four dynamic-index
-      scatters (`.at[i, :]`, `.at[:, i]`, row/col ``j``) are replaced by a
-      single fused ``jnp.where`` pass over iota masks.  Data-dependent
-      scatters hit XLA:CPU's scalar scatter path (~µs per *element*);
-      the mask select is one vectorized pass and XLA fuses the whole
-      chain.  Gathers (columns ``i``/``j``, ``dmin``) stay gathers — they
-      are fast everywhere.
-    * **hierarchical min instead of variadic argmin** — ``jnp.argmin``
-      lowers to a variadic (value, index) reduce that XLA:CPU scalarizes
-      (~5× the cost of a plain pass here).  Instead: a vectorized
-      ``min`` over columns → ``(n,)`` row minima, then O(n) scalar work
-      recovers the first row attaining the global min and the first
-      column within that row.  First-row-then-first-column IS row-major
-      first-minimum, so tie-breaking matches ``jnp.argmin`` exactly.
-      The row-min reduce is computed at the tail of each step, directly
-      off the just-written matrix, so XLA can fuse it with the update
-      pass's producer.
-    """
-    n_pad = D.shape[0]
-    ks = jnp.arange(n_pad)
-    f32 = jnp.float32
-    inf = jnp.float32(jnp.inf)
-    alive0 = ks < n_real
-    sizes0 = alive0.astype(f32)
-    valid0 = alive0[:, None] & alive0[None, :] & ~jnp.eye(n_pad, dtype=bool)
-    Dm0 = jnp.where(valid0, D, inf)
-
-    def row_major_first_min(Dm):
-        """(r, c, min) with jnp.argmin's exact tie-breaking, via vector min."""
-        rowmin = jnp.min(Dm, axis=1)                     # vectorized reduce
-        m = jnp.min(rowmin)
-        r = jnp.min(jnp.where(rowmin == m, ks, n_pad))   # first row with m
-        c = jnp.min(jnp.where(Dm[r, :] == m, ks, n_pad))  # first col in row r
-        return r, c, m
-
-    def step(t, s):
-        Dm, alive, sizes, merges, (r, c, dmin) = s
-        i, j = jnp.minimum(r, c), jnp.maximum(r, c)
-
-        # masked columns agree with the serial engine's D[:, i] wherever
-        # ``keep`` is true — the only lanes update_row's output is read at.
-        d_ki, d_kj = Dm[:, i], Dm[:, j]
-        new = update_row(method, d_ki, d_kj, dmin, sizes[i], sizes[j], sizes)
-        keep = alive & (ks != i) & (ks != j)
-        new = jnp.where(keep, new, inf)
-
-        # row/col i ← new, row/col j ← inf, in one fused select pass
-        is_i, is_j = ks == i, ks == j
-        Dm2 = jnp.where(
-            is_j[:, None] | is_j[None, :],
-            inf,
-            jnp.where(
-                is_i[:, None],
-                new[None, :],
-                jnp.where(is_i[None, :], new[:, None], Dm),
-            ),
+    def run(D, alive):
+        return run_dense(
+            D,
+            alive,
+            method=method,
+            n_steps=n_steps,
+            variant=variant,
+            distance_threshold=threshold if with_threshold else None,
         )
-        new_size = sizes[i] + sizes[j]
-        alive2 = alive & ~is_j
-        sizes2 = jnp.where(is_i, new_size, jnp.where(is_j, 0.0, sizes))
-        merges2 = merges.at[t].set(
-            jnp.stack([i.astype(f32), j.astype(f32), dmin, new_size])
-        )
-        # next step's minimum, computed off the freshly written matrix so
-        # the row-min reduce fuses with the update pass
-        return (Dm2, alive2, sizes2, merges2, row_major_first_min(Dm2))
 
-    init = (
-        Dm0,
-        alive0,
-        sizes0,
-        jnp.zeros((n_steps, 4), f32),
-        row_major_first_min(Dm0),
-    )
-    out = jax.lax.fori_loop(0, n_steps, step, init)
-    return out[3]
+    return jax.vmap(run)(Db, alive0)
 
 
-# ---------------------------------------------------------------------------
-# engines — one compiled program per (bucket_n, bucket_B, method)
-# ---------------------------------------------------------------------------
+@partial(
+    jax.jit,
+    static_argnames=("method", "n_steps", "variant", "with_threshold"),
+)
+def _run_vmap(Db, n_real, threshold, *, method, n_steps, variant,
+              with_threshold):
+    """Serial batched engine: the vmap composition on one device."""
+    return _vmap_engine(Db, n_real, threshold, method=method,
+                        n_steps=n_steps, variant=variant,
+                        with_threshold=with_threshold)
 
 
-@partial(jax.jit, static_argnames=("method", "n_steps"))
-def _run_vmap(Db, n_real, *, method: str, n_steps: int):
-    """Serial batched engine: vmap over problems on one device."""
-    Db = _prepare_batch(Db)
-    return jax.vmap(partial(_lw_one_padded, method, n_steps))(Db, n_real)
-
-
-@partial(jax.jit, static_argnames=("method", "n_steps", "mesh"))
-def _run_sharded(Db, n_real, *, method: str, n_steps: int, mesh: Mesh):
+@partial(
+    jax.jit,
+    static_argnames=("method", "n_steps", "mesh", "variant",
+                     "with_threshold"),
+)
+def _run_sharded(Db, n_real, threshold, *, method, n_steps, mesh, variant,
+                 with_threshold):
     """Distributed batched engine: whole problems sharded over the mesh.
 
-    Batch-axis ``shard_map`` — each device runs the vmap engine on its
-    local slice of problems; no collective is needed (the merge lists are
-    per-problem, not replicated).
-    """
-    from repro.core.distributed import AXIS
+    Batch-axis ``shard_map`` — each device runs the same vmap
+    composition on its local slice of problems; no collective is needed
+    (the merge lists are per-problem, not replicated)."""
 
-    def body(D_local, n_local):
-        D_local = _prepare_batch(D_local)
-        return jax.vmap(partial(_lw_one_padded, method, n_steps))(
-            D_local, n_local
-        )
+    def body(D_local, n_local, thr):
+        return _vmap_engine(D_local, n_local, thr, method=method,
+                            n_steps=n_steps, variant=variant,
+                            with_threshold=with_threshold)
 
     return shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(AXIS, None, None), P(AXIS)),
-        out_specs=P(AXIS, None, None),
-    )(Db, n_real)
+        in_specs=(P(AXIS, None, None), P(AXIS), P()),
+        out_specs=LWResult(merges=P(AXIS, None, None), n_merges=P(AXIS)),
+    )(Db, n_real, threshold)
 
 
-def _run_kernel(Db, n_real, *, method: str, n_steps: int):
-    """Kernel batched engine: Pallas min-scan / LW-update over a batch grid."""
+def _run_kernel(Db, n_real, threshold, *, method, n_steps, variant,
+                with_threshold):
+    """Kernel batched engine: vmap of the Pallas composition."""
     from repro.kernels.ops import lance_williams_kernelized_batch
 
     return lance_williams_kernelized_batch(
-        Db, n_real, method=method, n_steps=n_steps
+        Db,
+        n_real,
+        method=method,
+        n_steps=n_steps,
+        variant=variant,
+        distance_threshold=(
+            float(threshold) if with_threshold else None
+        ),
     )
 
 
@@ -279,22 +200,32 @@ def cluster_batch_merges(
     *,
     engine: str = "serial",
     mesh: Mesh | None = None,
+    variant: str = "baseline",
+    stop_at_k: int = 1,
+    distance_threshold: float | None = None,
 ) -> tuple[list[np.ndarray], BatchStats]:
     """Cluster many independent ``(n_b, n_b)`` distance matrices at once.
 
     Returns ``(merge_lists, stats)`` — ``merge_lists[b]`` is the
-    ``(n_b - 1, 4)`` slot-convention merge list for problem ``b``, in input
-    order: bit-identical to ``lance_williams(matrices[b], method).merges``
+    slot-convention merge list for problem ``b``, in input order:
+    bit-identical to ``lance_williams(matrices[b], method, ...).merges``
     for the ``serial``/``distributed`` engines, index-identical with
-    float-tolerance distances for ``kernel``.
+    float-tolerance distances for ``kernel``.  With ``stop_at_k`` /
+    ``distance_threshold`` each problem's list is the exact prefix the
+    early-stopped single-problem run would produce (``stop_at_k``
+    statically shrinks the bucket trip count by ``k - 1``).
 
     ``engine``: ``serial`` (vmap, one device), ``distributed`` (problems
-    sharded over the mesh), or ``kernel`` (Pallas batch-grid inner loops).
+    sharded over the mesh), or ``kernel`` (Pallas inner loops).
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
     if engine not in ("serial", "distributed", "kernel"):
         raise ValueError(f"unknown batch engine {engine!r}")
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; pick from {VARIANTS}")
+    if stop_at_k < 1:
+        raise ValueError(f"stop_at_k must be >= 1, got {stop_at_k}")
     matrices = [np.asarray(m) for m in matrices]   # convert once, up front
     for b, m in enumerate(matrices):
         if m.ndim != 2 or m.shape[0] != m.shape[1]:
@@ -333,27 +264,37 @@ def cluster_batch_merges(
         n_real = np.zeros((B_pad,), np.int32)
         n_real[: len(idxs)] = [matrices[i].shape[0] for i in idxs]
 
-        n_steps = n_pad - 1
+        n_steps = max(n_pad - stop_at_k, 0)
+        thr = jnp.float32(
+            0.0 if distance_threshold is None else distance_threshold
+        )
+        kwargs = dict(
+            method=method,
+            n_steps=n_steps,
+            variant=variant,
+            with_threshold=distance_threshold is not None,
+        )
         if engine == "serial":
-            merges = _run_vmap(Db, n_real, method=method, n_steps=n_steps)
+            res = _run_vmap(Db, n_real, thr, **kwargs)
         elif engine == "kernel":
-            merges = _run_kernel(Db, n_real, method=method, n_steps=n_steps)
+            res = _run_kernel(Db, n_real, thr, **kwargs)
         else:
-            from repro.core.distributed import AXIS
-
             Dbj = jax.device_put(
                 jnp.asarray(Db), NamedSharding(mesh, P(AXIS, None, None))
             )
             nrj = jax.device_put(
                 jnp.asarray(n_real), NamedSharding(mesh, P(AXIS))
             )
-            merges = _run_sharded(
-                Dbj, nrj, method=method, n_steps=n_steps, mesh=mesh
-            )
-        merges = np.asarray(merges)
+            res = _run_sharded(Dbj, nrj, thr, mesh=mesh, **kwargs)
+        merges = np.asarray(res.merges)
+        n_merges = np.asarray(res.n_merges)
         for slot, idx in enumerate(idxs):
             n = int(n_real[slot])
-            out[idx] = merges[slot, : n - 1]
+            # a problem's real merges are the first max(0, n - stop_at_k)
+            # trips; a threshold stop (or exhaustion under while-loop
+            # semantics) can cut that further via the recorded count.
+            upto = min(max(n - stop_at_k, 0), int(n_merges[slot]))
+            out[idx] = merges[slot, :upto]
 
     stats = BatchStats(
         n_problems=len(matrices),

@@ -14,17 +14,30 @@ from __future__ import annotations
 import numpy as np
 
 
-def to_linkage_matrix(merges: np.ndarray) -> np.ndarray:
+def _leaf_count(merges: np.ndarray, n: int | None) -> int:
+    """Number of leaves.  ``n`` must be given for early-stopped runs,
+    whose merge lists are shorter than ``n - 1``."""
+    m = merges.shape[0]
+    if n is None:
+        return m + 1
+    if not m <= n - 1:
+        raise ValueError(f"{m} merges is too many for n={n} leaves")
+    return n
+
+
+def to_linkage_matrix(merges: np.ndarray, n: int | None = None) -> np.ndarray:
     """Convert slot-convention merges to a scipy-style linkage matrix ``Z``.
 
     Row ``t`` of ``Z`` is ``(id_a, id_b, dist, size)`` where ids ``< n`` are
-    leaves and id ``n + t`` names the cluster created at step ``t``.
+    leaves and id ``n + t`` names the cluster created at step ``t``.  For
+    an early-stopped run pass the leaf count ``n`` explicitly; ``Z`` then
+    has one row per performed merge (a truncated forest).
     """
     merges = np.asarray(merges)
-    n = merges.shape[0] + 1
+    n = _leaf_count(merges, n)
     slot_id = np.arange(n)          # which cluster-id currently sits in a slot
-    Z = np.zeros((n - 1, 4))
-    for t in range(n - 1):
+    Z = np.zeros((merges.shape[0], 4))
+    for t in range(merges.shape[0]):
         i, j, dist, size = merges[t]
         i, j = int(round(i)), int(round(j))
         a, b = slot_id[i], slot_id[j]
@@ -33,15 +46,22 @@ def to_linkage_matrix(merges: np.ndarray) -> np.ndarray:
     return Z
 
 
-def cut(merges: np.ndarray, k: int) -> np.ndarray:
+def cut(merges: np.ndarray, k: int, n: int | None = None) -> np.ndarray:
     """Flat labels for ``k`` clusters — apply the first ``n-k`` merges.
 
     Labels are contiguous ints in ``[0, k)`` ordered by first appearance.
+    For an early-stopped run pass ``n`` explicitly; ``k`` can then reach
+    down only to the stop level ``n - len(merges)``.
     """
     merges = np.asarray(merges)
-    n = merges.shape[0] + 1
+    n = _leaf_count(merges, n)
     if not 1 <= k <= n:
         raise ValueError(f"k must be in [1, {n}], got {k}")
+    if n - k > merges.shape[0]:
+        raise ValueError(
+            f"cannot cut at k={k}: this run stopped early after "
+            f"{merges.shape[0]} merges (k >= {n - merges.shape[0]} required)"
+        )
     parent = np.arange(n)
 
     def find(x: int) -> int:
@@ -80,18 +100,18 @@ def is_monotone(merges: np.ndarray, atol: float = 1e-5) -> bool:
     return bool(np.all(np.diff(h) >= -atol * np.maximum(1.0, np.abs(h[:-1]))))
 
 
-def validate_merges(merges: np.ndarray) -> None:
+def validate_merges(merges: np.ndarray, n: int | None = None) -> None:
     """Structural invariants every engine must satisfy (property tests).
 
     * each step merges two distinct live slots, ``i < j``
     * slot ``j`` never reappears after being tombstoned
-    * sizes sum correctly (final merge has size ``n``)
+    * sizes sum correctly (the final merge of a *full* run has size ``n``)
     """
     merges = np.asarray(merges)
-    n = merges.shape[0] + 1
+    n = _leaf_count(merges, n)
     alive = np.ones(n, bool)
     sizes = np.ones(n)
-    for t in range(n - 1):
+    for t in range(merges.shape[0]):
         i, j = int(round(merges[t, 0])), int(round(merges[t, 1]))
         if not (0 <= i < j < n):
             raise AssertionError(f"step {t}: bad slot pair ({i}, {j})")
@@ -103,5 +123,6 @@ def validate_merges(merges: np.ndarray) -> None:
                 f"step {t}: recorded size {merges[t, 3]} != {sizes[i]}"
             )
         alive[j] = False
-    if abs(sizes[int(round(merges[-1, 0]))] - n) > 1e-3:
-        raise AssertionError("final cluster does not contain all items")
+    if n > 1 and merges.shape[0] == n - 1:   # full run: one cluster remains
+        if abs(sizes[int(round(merges[-1, 0]))] - n) > 1e-3:
+            raise AssertionError("final cluster does not contain all items")

@@ -16,12 +16,16 @@ step-by-step correspondence).  The ``(n, n)`` distance matrix is
                    column ``i``; the owner rewrites row ``i``; row/col ``j``
                    is tombstoned via the replicated ``alive`` mask
 
-The whole n−1 loop runs on-device inside the ``shard_map`` (one compiled
-program, no host round-trips).  Storage per device is ``n²/p`` elements —
-the paper's headline scaling — verified in ``benchmarks/bench_storage.py``.
+The loop body is :func:`repro.core.engine.make_sharded_body` — the
+unified merge loop composed with the collective argmin/fetch/write
+primitives — run inside one ``shard_map``-ped program (no host
+round-trips).  Storage per device is ``n²/p`` elements — the paper's
+headline scaling — verified in ``benchmarks/bench_storage.py``.
 
-``variant='rowmin'`` is the beyond-paper optimized engine (cached
-row-minima, fastcluster-style): see EXPERIMENTS.md §Perf.
+``variant='rowmin'``/``'lazy'`` select the cached-row-minima argmin ops
+(fastcluster-style, beyond paper; EXPERIMENTS.md §Perf), and
+``stop_at_k``/``distance_threshold`` early-terminate the loop — both are
+engine-level knobs shared with every other backend.
 """
 
 from __future__ import annotations
@@ -34,12 +38,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.compat import pvary, shard_map
-
-from repro.core.lance_williams import LWResult
-from repro.core.linkage import METHODS, update_row
-
-AXIS = "p"
+from repro.compat import shard_map
+from repro.core.engine import (
+    AXIS,
+    VARIANTS,
+    LWResult,
+    make_sharded_body,
+    resolve_n_steps,
+    symmetrize,
+)
+from repro.core.linkage import METHODS
 
 
 def make_cluster_mesh(devices=None) -> Mesh:
@@ -62,339 +70,33 @@ def _pad_matrix(D: np.ndarray | jax.Array, n_pad: int) -> jax.Array:
     return out.at[:n, :n].set(D)
 
 
-# ---------------------------------------------------------------------------
-# the sharded engine
-# ---------------------------------------------------------------------------
-
-
-def _lw_body(method: str, n_steps: int):
-    """Build the per-shard body (closed over static method / step count)."""
-
-    def body(D_local: jax.Array, alive0: jax.Array, sizes0: jax.Array):
-        rows, n_pad = D_local.shape
-        offset = jax.lax.axis_index(AXIS) * rows
-        row_ids = offset + jnp.arange(rows)
-        cols = jnp.arange(n_pad)
-        f32 = jnp.float32
-        # the carry mixes shard-varying (D_local) and replicated values; mark
-        # everything varying and reduce the merge list back at the end.
-        alive0 = pvary(alive0, AXIS)
-        sizes0 = pvary(sizes0, AXIS)
-
-        def step(t, state):
-            D_local, alive, sizes, merges = state
-
-            # -- step 1: local masked min over my row block -----------------
-            valid = (
-                alive[row_ids][:, None]
-                & alive[None, :]
-                & (row_ids[:, None] != cols[None, :])
-            )
-            Dm = jnp.where(valid, D_local, jnp.inf)
-            flat = jnp.argmin(Dm)                       # local row-major first-min
-            lr, lc = flat // n_pad, flat % n_pad
-            lmin = Dm[lr, lc]
-
-            # -- steps 2-3: all-broadcast the p local minima ----------------
-            trip = jnp.stack([lmin, (offset + lr).astype(f32), lc.astype(f32)])
-            allt = jax.lax.all_gather(trip, AXIS)        # (p, 3) — replicated
-
-            # -- steps 4-5: replicated global argmin (no communication) -----
-            w = jnp.argmin(allt[:, 0])                   # first shard wins ties
-            gmin = allt[w, 0]
-            r = allt[w, 1].astype(jnp.int32)
-            c = allt[w, 2].astype(jnp.int32)
-            i, j = jnp.minimum(r, c), jnp.maximum(r, c)  # slot i keeps the union
-
-            # -- step 6a: owner-contributes psum broadcast of rows i, j -----
-            def take_row(g):
-                mine = (g >= offset) & (g < offset + rows)
-                lrow = jnp.clip(g - offset, 0, rows - 1)
-                return jnp.where(mine, D_local[lrow, :], 0.0)
-
-            rows_ij = jax.lax.psum(
-                jnp.stack([take_row(i), take_row(j)]), AXIS
-            )                                             # (2, n_pad) — O(2n) bytes
-            d_ki, d_kj = rows_ij[0], rows_ij[1]
-
-            # -- step 6b: LW recurrence; column-i slice + owner row write ---
-            new = update_row(method, d_ki, d_kj, gmin, sizes[i], sizes[j], sizes)
-            keep = alive & (cols != i) & (cols != j)
-            new = jnp.where(keep, new, 0.0)
-
-            D_local = D_local.at[:, i].set(
-                jax.lax.dynamic_slice(new, (offset,), (rows,))
-            )
-            own = (i >= offset) & (i < offset + rows)
-            li = jnp.clip(i - offset, 0, rows - 1)
-            D_own = D_local.at[li, :].set(new).at[li, i].set(0.0)
-            D_local = jnp.where(own, D_own, D_local)
-
-            # -- replicated bookkeeping (identical on every shard) ----------
-            new_size = sizes[i] + sizes[j]
-            alive = alive.at[j].set(False)
-            sizes = sizes.at[i].set(new_size).at[j].set(0.0)
-            merges = merges.at[t].set(
-                jnp.stack([i.astype(f32), j.astype(f32), gmin, new_size])
-            )
-            return (D_local, alive, sizes, merges)
-
-        merges0 = pvary(jnp.zeros((n_steps, 4), f32), AXIS)
-        _, _, _, merges = jax.lax.fori_loop(
-            0, n_steps, step, (D_local, alive0, sizes0, merges0)
-        )
-        # every shard computed the identical merge list; pmax re-establishes
-        # the replicated type for out_specs=P() (values are bitwise equal).
-        return jax.lax.pmax(merges, AXIS)
-
-    return body
-
-
-# fastcluster-style cached row-minima engine (beyond-paper; §Perf) ----------
-
-
-def _lw_body_rowmin(method: str, n_steps: int):
-    """Optimized engine: per-row cached minima make step 1 O(n/p) amortized.
-
-    Each shard keeps ``(rmin, rarg)`` for its rows.  After a merge the cache
-    entry for row k can only be *invalidated* when its argmin pointed at the
-    merged slots; those rows are rescanned (vectorized masked re-min over
-    the invalid rows only — O(n) each, amortized O(1) rows per step for
-    reducible linkages).  The global min each step is then a scan of n/p
-    cached values instead of n²/p cells.
-    """
-
-    def body(D_local: jax.Array, alive0: jax.Array, sizes0: jax.Array):
-        rows, n_pad = D_local.shape
-        offset = jax.lax.axis_index(AXIS) * rows
-        row_ids = offset + jnp.arange(rows)
-        cols = jnp.arange(n_pad)
-        f32 = jnp.float32
-
-        alive0 = pvary(alive0, AXIS)
-        sizes0 = pvary(sizes0, AXIS)
-
-        def rescan(D_local, alive, mask_rows):
-            """Masked re-min of the flagged local rows (vectorized)."""
-            valid = (
-                alive[row_ids][:, None]
-                & alive[None, :]
-                & (row_ids[:, None] != cols[None, :])
-            )
-            Dm = jnp.where(valid, D_local, jnp.inf)
-            rm = jnp.min(Dm, axis=1)
-            ra = jnp.argmin(Dm, axis=1)
-            return rm, ra, mask_rows
-
-        def step(t, state):
-            D_local, alive, sizes, merges, rmin, rarg = state
-
-            # -- step 1': global min from cached row minima ------------------
-            live_row = alive[row_ids]
-            rvals = jnp.where(live_row, rmin, jnp.inf)
-            lr = jnp.argmin(rvals)
-            lmin = rvals[lr]
-            lc = rarg[lr]
-
-            trip = jnp.stack([lmin, (offset + lr).astype(f32), lc.astype(f32)])
-            allt = jax.lax.all_gather(trip, AXIS)
-            w = jnp.argmin(allt[:, 0])
-            gmin = allt[w, 0]
-            r = allt[w, 1].astype(jnp.int32)
-            c = allt[w, 2].astype(jnp.int32)
-            i, j = jnp.minimum(r, c), jnp.maximum(r, c)
-
-            def take_row(g):
-                mine = (g >= offset) & (g < offset + rows)
-                lrow = jnp.clip(g - offset, 0, rows - 1)
-                return jnp.where(mine, D_local[lrow, :], 0.0)
-
-            rows_ij = jax.lax.psum(jnp.stack([take_row(i), take_row(j)]), AXIS)
-            d_ki, d_kj = rows_ij[0], rows_ij[1]
-
-            new = update_row(method, d_ki, d_kj, gmin, sizes[i], sizes[j], sizes)
-            keep = alive & (cols != i) & (cols != j)
-            new = jnp.where(keep, new, 0.0)
-
-            D_local = D_local.at[:, i].set(
-                jax.lax.dynamic_slice(new, (offset,), (rows,))
-            )
-            own = (i >= offset) & (i < offset + rows)
-            li = jnp.clip(i - offset, 0, rows - 1)
-            D_own = D_local.at[li, :].set(new).at[li, i].set(0.0)
-            D_local = jnp.where(own, D_own, D_local)
-
-            alive2 = alive.at[j].set(False)
-
-            # -- cache maintenance ------------------------------------------
-            # new column value can only lower a row's min; rows whose cached
-            # argmin pointed into i or j (or row i itself) must rescan.
-            new_local = jax.lax.dynamic_slice(new, (offset,), (rows,))
-            lower = (new_local < rmin) & (row_ids != i) & (row_ids != j)
-            rmin2 = jnp.where(lower, new_local, rmin)
-            rarg2 = jnp.where(lower, i, rarg)
-            stale = (rarg2 == i) | (rarg2 == j) | (row_ids == i)
-            stale = stale & ~lower                     # fresh i-entries are exact
-            full_rm, full_ra, _ = rescan(D_local, alive2, stale)
-            rmin3 = jnp.where(stale, full_rm, rmin2)
-            rarg3 = jnp.where(stale, full_ra, rarg2)
-
-            new_size = sizes[i] + sizes[j]
-            sizes = sizes.at[i].set(new_size).at[j].set(0.0)
-            merges = merges.at[t].set(
-                jnp.stack([i.astype(f32), j.astype(f32), gmin, new_size])
-            )
-            return (D_local, alive2, sizes, merges, rmin3, rarg3)
-
-        valid0 = (
-            alive0[row_ids][:, None]
-            & alive0[None, :]
-            & (row_ids[:, None] != cols[None, :])
-        )
-        Dm0 = jnp.where(valid0, D_local, jnp.inf)
-        rmin0 = jnp.min(Dm0, axis=1)
-        rarg0 = jnp.argmin(Dm0, axis=1)
-        merges0 = pvary(jnp.zeros((n_steps, 4), f32), AXIS)
-        _, _, _, merges, _, _ = jax.lax.fori_loop(
-            0,
-            n_steps,
-            step,
-            (D_local, alive0, sizes0, merges0, rmin0, rarg0),
-        )
-        return jax.lax.pmax(merges, AXIS)
-
-    return body
-
-
-def _lw_body_lazy(method: str, n_steps: int, batch_k: int = 8):
-    """§Perf-3b: cached row-minima with a bounded data-dependent drain.
-
-    The plain ``rowmin`` variant is refuted by measurement: with static
-    shapes its "rescan stale rows" step vectorizes as a full O(n²/p)
-    re-min every iteration.  Here stale rows are instead marked dirty and
-    drained by an inner ``lax.while_loop`` that re-scans at most
-    ``batch_k`` rows per trip (gather K rows → masked row-min → scatter
-    back).  Reducible linkages dirty O(1) rows per merge on average, so
-    the expected per-iteration work drops from O(n²/p) to
-    O(n/p + K·n) with a worst case equal to the baseline.
-    """
-
-    def body(D_local: jax.Array, alive0: jax.Array, sizes0: jax.Array):
-        rows, n_pad = D_local.shape
-        offset = jax.lax.axis_index(AXIS) * rows
-        row_ids = offset + jnp.arange(rows)
-        cols = jnp.arange(n_pad)
-        f32 = jnp.float32
-        K = min(batch_k, rows)
-
-        alive0 = pvary(alive0, AXIS)
-        sizes0 = pvary(sizes0, AXIS)
-
-        def row_min(D_local, alive, r_idx):
-            """Masked min/argmin of local rows r_idx (K,) — O(K·n)."""
-            sub = jnp.take(D_local, r_idx, axis=0)            # (K, n_pad)
-            gids = offset + r_idx
-            valid = (alive[gids][:, None] & alive[None, :]
-                     & (gids[:, None] != cols[None, :]))
-            sub = jnp.where(valid, sub, jnp.inf)
-            return jnp.min(sub, axis=1), jnp.argmin(sub, axis=1)
-
-        def drain(D_local, alive, rmin, rarg, dirty):
-            def cond(st):
-                return jnp.any(st[2])
-
-            def body_(st):
-                rmin, rarg, dirty = st
-                picks = jax.lax.top_k(dirty.astype(f32), K)[1]   # (K,)
-                rm, ra = row_min(D_local, alive, picks)
-                sel = dirty[picks]                                # only real
-                rmin = rmin.at[picks].set(jnp.where(sel, rm, rmin[picks]))
-                rarg = rarg.at[picks].set(jnp.where(sel, ra, rarg[picks]))
-                dirty = dirty.at[picks].set(False)
-                return (rmin, rarg, dirty)
-
-            return jax.lax.while_loop(cond, body_, (rmin, rarg, dirty))
-
-        def step(t, state):
-            D_local, alive, sizes, merges, rmin, rarg = state
-
-            live_row = alive[row_ids]
-            rvals = jnp.where(live_row, rmin, jnp.inf)
-            lr = jnp.argmin(rvals)
-            lmin = rvals[lr]
-            lc_ = rarg[lr]
-
-            trip = jnp.stack([lmin, (offset + lr).astype(f32), lc_.astype(f32)])
-            allt = jax.lax.all_gather(trip, AXIS)
-            w = jnp.argmin(allt[:, 0])
-            gmin = allt[w, 0]
-            r = allt[w, 1].astype(jnp.int32)
-            c = allt[w, 2].astype(jnp.int32)
-            i, j = jnp.minimum(r, c), jnp.maximum(r, c)
-
-            def take_row(g):
-                mine = (g >= offset) & (g < offset + rows)
-                lrow = jnp.clip(g - offset, 0, rows - 1)
-                return jnp.where(mine, D_local[lrow, :], 0.0)
-
-            rows_ij = jax.lax.psum(jnp.stack([take_row(i), take_row(j)]), AXIS)
-            d_ki, d_kj = rows_ij[0], rows_ij[1]
-
-            new = update_row(method, d_ki, d_kj, gmin, sizes[i], sizes[j], sizes)
-            keep = alive & (cols != i) & (cols != j)
-            new = jnp.where(keep, new, 0.0)
-
-            D_local = D_local.at[:, i].set(
-                jax.lax.dynamic_slice(new, (offset,), (rows,)))
-            own = (i >= offset) & (i < offset + rows)
-            li = jnp.clip(i - offset, 0, rows - 1)
-            D_own = D_local.at[li, :].set(new).at[li, i].set(0.0)
-            D_local = jnp.where(own, D_own, D_local)
-
-            alive2 = alive.at[j].set(False)
-
-            # cache maintenance: cheap lowers in place, the rest goes dirty
-            new_local = jax.lax.dynamic_slice(new, (offset,), (rows,))
-            lower = (new_local < rmin) & (row_ids != i) & (row_ids != j)
-            rmin2 = jnp.where(lower, new_local, rmin)
-            rarg2 = jnp.where(lower, i, rarg)
-            dirty = ((rarg2 == i) | (rarg2 == j) | (row_ids == i)) & ~lower
-            dirty = dirty & alive2[row_ids]
-            rmin3, rarg3, _ = drain(D_local, alive2, rmin2, rarg2, dirty)
-
-            new_size = sizes[i] + sizes[j]
-            sizes = sizes.at[i].set(new_size).at[j].set(0.0)
-            merges = merges.at[t].set(
-                jnp.stack([i.astype(f32), j.astype(f32), gmin, new_size]))
-            return (D_local, alive2, sizes, merges, rmin3, rarg3)
-
-        valid0 = (alive0[row_ids][:, None] & alive0[None, :]
-                  & (row_ids[:, None] != cols[None, :]))
-        Dm0 = jnp.where(valid0, D_local, jnp.inf)
-        rmin0 = jnp.min(Dm0, axis=1)
-        rarg0 = jnp.argmin(Dm0, axis=1)
-        merges0 = pvary(jnp.zeros((n_steps, 4), f32), AXIS)
-        _, _, _, merges, _, _ = jax.lax.fori_loop(
-            0, n_steps, step,
-            (D_local, alive0, sizes0, merges0, rmin0, rarg0))
-        return jax.lax.pmax(merges, AXIS)
-
-    return body
-
-
-_BODIES = {"baseline": _lw_body, "rowmin": _lw_body_rowmin,
-           "lazy": _lw_body_lazy}
-
-
-@partial(jax.jit, static_argnames=("method", "n_steps", "mesh", "variant"))
-def _run(D, alive0, sizes0, *, method: str, n_steps: int, mesh: Mesh, variant: str):
-    body = _BODIES[variant](method, n_steps)
+@partial(
+    jax.jit,
+    static_argnames=("method", "n_steps", "mesh", "variant", "with_threshold"),
+)
+def _run(
+    D,
+    alive0,
+    sizes0,
+    threshold=0.0,
+    *,
+    method: str,
+    n_steps: int,
+    mesh: Mesh,
+    variant: str,
+    with_threshold: bool = False,
+):
+    # the threshold is a traced replicated operand (only None-vs-set is
+    # structural), so distinct dedup radii share one compiled program
+    body = make_sharded_body(
+        method, n_steps, variant, with_threshold=with_threshold
+    )
     return shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(AXIS, None), P(), P()),
-        out_specs=P(),
-    )(D, alive0, sizes0)
+        in_specs=(P(AXIS, None), P(), P(), P()),
+        out_specs=(P(), P()),
+    )(D, alive0, sizes0, jnp.asarray(threshold, jnp.float32))
 
 
 def distributed_lance_williams(
@@ -402,6 +104,9 @@ def distributed_lance_williams(
     method: str = "complete",
     mesh: Mesh | None = None,
     variant: str = "baseline",
+    *,
+    stop_at_k: int = 1,
+    distance_threshold: float | None = None,
 ) -> LWResult:
     """Cluster an ``(n, n)`` distance matrix across every device of *mesh*.
 
@@ -410,8 +115,8 @@ def distributed_lance_williams(
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
-    if variant not in _BODIES:
-        raise ValueError(f"unknown variant {variant!r}; pick from {tuple(_BODIES)}")
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; pick from {VARIANTS}")
     mesh = mesh if mesh is not None else make_cluster_mesh()
     if len(mesh.axis_names) != 1:
         mesh = flatten_mesh(mesh)
@@ -419,20 +124,24 @@ def distributed_lance_williams(
 
     n = int(D.shape[0])
     n_pad = math.ceil(n / p) * p
-    Dp = _pad_matrix(D, n_pad)
-    # symmetrize exactly like the serial engine
-    upper = jnp.triu(Dp, k=1)
-    Dp = jnp.where(jnp.any(jnp.tril(Dp, k=-1) != 0), Dp, upper + upper.T)
-    Dp = 0.5 * (Dp + Dp.T) * (1.0 - jnp.eye(n_pad))
+    Dp = symmetrize(_pad_matrix(D, n_pad))      # single input-normalization path
 
     alive0 = (jnp.arange(n_pad) < n)
     sizes0 = alive0.astype(jnp.float32)
 
     Dp = jax.device_put(Dp, NamedSharding(mesh, P(AXIS, None)))
-    merges = _run(
-        Dp, alive0, sizes0, method=method, n_steps=n - 1, mesh=mesh, variant=variant
+    merges, n_merges = _run(
+        Dp,
+        alive0,
+        sizes0,
+        jnp.float32(0.0 if distance_threshold is None else distance_threshold),
+        method=method,
+        n_steps=resolve_n_steps(n, stop_at_k),
+        mesh=mesh,
+        variant=variant,
+        with_threshold=distance_threshold is not None,
     )
-    return LWResult(merges=merges)
+    return LWResult(merges=merges, n_merges=n_merges)
 
 
 # ---------------------------------------------------------------------------

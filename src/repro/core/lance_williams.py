@@ -11,124 +11,103 @@ This is the faithful on-device realization of the paper's base algorithm
       3. re-compute D(k, i∪j) for every live k via the LW recurrence     O(n)
       4. record the merge (tree level) in the dendrogram buffer
 
-Hardware adaptation (see DESIGN.md §3): the paper stores the strict upper
-triangle and tombstones by bookkeeping; on TPU we keep the dense symmetric
-``(n, n)`` matrix and tombstone with an ``alive`` mask applied at argmin
-time.  Shapes stay static, every step is two fused vector ops and one
-masked argmin, and the whole n-1 iteration loop runs on-device inside a
-single ``lax.fori_loop`` (no host round-trips).
+The loop itself lives in :mod:`repro.core.engine` (DESIGN.md §3) — this
+module is the serial composition: dense premasked storage, the
+hierarchical row-min argmin op (or a cached-row-minima ``variant``), the
+fused jnp ``update_row``, and a plain on-device ``fori_loop`` (a
+``while_loop`` when ``distance_threshold`` asks for data-dependent early
+exit).  No host round-trips.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.linkage import METHODS, update_row
+from repro.core.engine import (
+    VARIANTS,
+    LWResult,
+    resolve_n_steps,
+    run_dense,
+    symmetrize,
+)
+from repro.core.linkage import METHODS, default_metric
+
+__all__ = ["LWResult", "lance_williams", "lance_williams_from_points"]
 
 
-class LWResult(NamedTuple):
-    """Output of a Lance-Williams run.
-
-    merges: ``(n-1, 4)`` float32 — rows ``(i, j, dist, new_size)`` where
-        ``i < j`` are the *slot* indices merged at that step (slot ``i``
-        keeps the union).  Use :mod:`repro.core.dendrogram` to convert to a
-        scipy-style linkage matrix or flat cluster labels.
-    """
-
-    merges: jax.Array
-
-
-def _prepare(D: jax.Array) -> jax.Array:
-    """Symmetrize and zero the diagonal (accepts upper-triangular input)."""
-    D = jnp.asarray(D, jnp.float32)
+@partial(
+    jax.jit,
+    static_argnames=("method", "variant", "stop_at_k", "with_threshold"),
+)
+def _run(D, threshold, *, method, variant, stop_at_k, with_threshold):
+    # the threshold is a traced operand (only None-vs-set is structural),
+    # so distinct dedup radii share one compiled loop
+    D = symmetrize(D)
     n = D.shape[0]
-    if D.ndim != 2 or D.shape[1] != n:
-        raise ValueError(f"distance matrix must be square, got {D.shape}")
-    eye = jnp.eye(n, dtype=bool)
-    # Accept either a full symmetric matrix or just the upper triangle.
-    upper = jnp.triu(D, k=1)
-    full_sym = jnp.where(jnp.any(jnp.tril(D, k=-1) != 0), D, upper + upper.T)
-    return jnp.where(eye, 0.0, 0.5 * (full_sym + full_sym.T))
+    return run_dense(
+        D,
+        jnp.ones((n,), bool),
+        method=method,
+        n_steps=resolve_n_steps(n, stop_at_k),
+        variant=variant,
+        distance_threshold=threshold if with_threshold else None,
+    )
 
 
-@partial(jax.jit, static_argnames=("method",))
-def lance_williams(D: jax.Array, method: str = "complete") -> LWResult:
+def lance_williams(
+    D: jax.Array,
+    method: str = "complete",
+    *,
+    variant: str = "baseline",
+    stop_at_k: int = 1,
+    distance_threshold: float | None = None,
+) -> LWResult:
     """Run serial Lance-Williams clustering on an ``(n, n)`` distance matrix.
 
-    ``method`` is one of :data:`repro.core.linkage.METHODS`.  Complete
-    linkage is the paper's experimental configuration.
+    ``method`` is one of :data:`repro.core.linkage.METHODS` (complete
+    linkage is the paper's experimental configuration); ``variant`` picks
+    the argmin primitive (:data:`repro.core.engine.VARIANTS`).
+    ``stop_at_k`` / ``distance_threshold`` stop the merge loop early: at
+    ``k`` remaining clusters (statically fewer trips) and/or before the
+    first merge whose distance exceeds the threshold.
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
-    D = _prepare(D)
-    n = D.shape[0]
-    eye = jnp.eye(n, dtype=bool)
-    ks = jnp.arange(n)
-
-    class _State(NamedTuple):
-        D: jax.Array        # (n, n) float32, symmetric; dead slots hold garbage
-        alive: jax.Array    # (n,)  bool
-        sizes: jax.Array    # (n,)  float32 cluster cardinalities
-        merges: jax.Array   # (n-1, 4) float32
-
-    def step(t, s: _State) -> _State:
-        # -- paper step 1: global minimum over live, off-diagonal cells -----
-        valid = s.alive[:, None] & s.alive[None, :] & ~eye
-        Dm = jnp.where(valid, s.D, jnp.inf)
-        flat = jnp.argmin(Dm)                      # row-major first-minimum
-        r, c = flat // n, flat % n
-        i, j = jnp.minimum(r, c), jnp.maximum(r, c)  # slot i keeps the union
-        dmin = Dm[r, c]
-
-        # -- paper step 3/6: LW recurrence over the whole row ---------------
-        d_ki, d_kj = s.D[:, i], s.D[:, j]
-        new = update_row(method, d_ki, d_kj, dmin, s.sizes[i], s.sizes[j], s.sizes)
-        keep = s.alive & (ks != i) & (ks != j)
-        new = jnp.where(keep, new, 0.0)            # dead slots stay inert
-
-        D = s.D.at[i, :].set(new).at[:, i].set(new)
-        D = D.at[i, i].set(0.0)
-
-        # -- tombstone j, grow i, record the tree level ----------------------
-        new_size = s.sizes[i] + s.sizes[j]
-        alive = s.alive.at[j].set(False)
-        sizes = s.sizes.at[i].set(new_size).at[j].set(0.0)
-        merges = s.merges.at[t].set(
-            jnp.stack([i.astype(jnp.float32), j.astype(jnp.float32), dmin, new_size])
-        )
-        return _State(D, alive, sizes, merges)
-
-    init = _State(
-        D=D,
-        alive=jnp.ones((n,), bool),
-        sizes=jnp.ones((n,), jnp.float32),
-        merges=jnp.zeros((n - 1, 4), jnp.float32),
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; pick from {VARIANTS}")
+    D = jnp.asarray(D, jnp.float32)
+    if D.ndim != 2 or D.shape[0] != D.shape[1]:
+        raise ValueError(f"distance matrix must be square, got {D.shape}")
+    return _run(
+        D,
+        jnp.float32(0.0 if distance_threshold is None else distance_threshold),
+        method=method,
+        variant=variant,
+        stop_at_k=stop_at_k,
+        with_threshold=distance_threshold is not None,
     )
-    out = jax.lax.fori_loop(0, n - 1, step, init)
-    return LWResult(merges=out.merges)
 
 
 def lance_williams_from_points(
-    X: jax.Array, method: str = "complete", metric: str = "auto"
+    X: jax.Array, method: str = "complete", metric: str = "auto", **kwargs
 ) -> LWResult:
     """Convenience: build the distance matrix from points, then cluster.
 
-    ``metric='auto'`` picks squared Euclidean for the geometric methods
-    (centroid / median / ward — their recurrences are exact in squared
-    distances) and plain Euclidean otherwise, matching scipy's convention.
+    ``metric='auto'`` defers to :func:`repro.core.linkage.default_metric`
+    (squared Euclidean for the geometric methods, plain Euclidean
+    otherwise, matching scipy's convention).
     """
     from repro.core.distance import pairwise_euclidean, pairwise_sq_euclidean
 
     if metric == "auto":
-        metric = "sqeuclidean" if method in ("centroid", "median", "ward") else "euclidean"
+        metric = default_metric(method)
     if metric == "sqeuclidean":
         D = pairwise_sq_euclidean(X)
     elif metric == "euclidean":
         D = pairwise_euclidean(X)
     else:
         raise ValueError(f"unknown metric {metric!r}")
-    return lance_williams(D, method=method)
+    return lance_williams(D, method=method, **kwargs)

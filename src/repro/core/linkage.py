@@ -36,6 +36,22 @@ METHODS: tuple[str, ...] = (
     "ward",
 )
 
+#: Methods whose recurrences are exact in **squared** Euclidean distances.
+GEOMETRIC_METHODS: tuple[str, ...] = ("centroid", "median", "ward")
+
+
+def default_metric(method: str) -> str:
+    """The metric convention for *method* when the caller passes points.
+
+    Squared Euclidean for the geometric methods (their recurrences are
+    exact in squared distances), plain Euclidean otherwise — scipy's
+    convention.  This is the single source of that rule; the ``cluster``
+    APIs and ``lance_williams_from_points`` both defer here.
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown linkage method {method!r}; pick from {METHODS}")
+    return "sqeuclidean" if method in GEOMETRIC_METHODS else "euclidean"
+
 
 def coefficients(method: str, n_i, n_j, n_k):
     """Return ``(a_i, a_j, b, g)`` for *method*, broadcast against ``n_k``.

@@ -8,6 +8,9 @@ into a single VMEM pass — no ``|·|``/product temporaries ever reach HBM.
 The linkage *method* is a compile-time parameter (it selects the
 coefficient algebra); the merge scalars ``(d_ij, n_i, n_j)`` arrive as a
 (1, lanes) operand so the same compiled kernel serves every iteration.
+Batched execution needs no dedicated kernel: under ``jax.vmap`` the
+``pallas_call`` batching rule prepends the batch as a leading grid
+dimension and the merge scalars become a per-problem operand.
 """
 
 from __future__ import annotations
@@ -87,62 +90,3 @@ def lw_update_pallas(
         scal,
     )
     return out.reshape(n)
-
-
-def lw_update_batch_pallas(
-    method: str,
-    d_ki: jax.Array,
-    d_kj: jax.Array,
-    d_ij: jax.Array,
-    n_i: jax.Array,
-    n_j: jax.Array,
-    sizes: jax.Array,
-    keep: jax.Array,
-    *,
-    block_n: int = 2048,
-    interpret: bool = False,
-) -> jax.Array:
-    """Batched fused LW row update — one independent problem per grid row.
-
-    The kernel body is *identical* to the single-problem kernel; only the
-    grid gains a leading batch dimension (``grid=(B, n // block_n)``) and
-    the merge scalars become a per-problem ``(B, lanes)`` operand.
-
-    d_ki, d_kj, sizes, keep: ``(B, n)``;  d_ij, n_i, n_j: ``(B,)``.
-    Returns the ``(B, n)`` updated rows.  ``n % block_n == 0`` required.
-    """
-    if method not in METHODS:
-        raise ValueError(f"unknown linkage method {method!r}")
-    B, n = d_ki.shape
-    block_n = min(block_n, n)
-    assert n % block_n == 0, (n, block_n)
-
-    scal = jnp.zeros((B, _LANES), jnp.float32)
-    scal = (
-        scal.at[:, 0].set(d_ij.astype(jnp.float32))
-        .at[:, 1].set(n_i.astype(jnp.float32))
-        .at[:, 2].set(n_j.astype(jnp.float32))
-    )
-
-    row_spec = pl.BlockSpec((1, block_n), lambda b, i: (b, i))
-    out = pl.pallas_call(
-        _make_kernel(method),
-        grid=(B, n // block_n),
-        in_specs=[
-            row_spec,
-            row_spec,
-            row_spec,
-            row_spec,
-            pl.BlockSpec((1, _LANES), lambda b, i: (b, 0)),
-        ],
-        out_specs=row_spec,
-        out_shape=jax.ShapeDtypeStruct((B, n), jnp.float32),
-        interpret=interpret,
-    )(
-        d_ki.astype(jnp.float32),
-        d_kj.astype(jnp.float32),
-        sizes.astype(jnp.float32),
-        keep.astype(jnp.float32),
-        scal,
-    )
-    return out

@@ -8,12 +8,12 @@ reduces the per-slab candidates.  Tie-breaking is row-major first-minimum,
 bit-identical to the serial engine.
 
 Outputs are written as (1, 128)-lane tiles (column 0 carries the value) so
-every store is a full-lane vector op on TPU.
+every store is a full-lane vector op on TPU.  Batched execution needs no
+dedicated kernel: under ``jax.vmap`` the ``pallas_call`` batching rule
+prepends the batch as a leading grid dimension (``grid=(B, slabs)``).
 """
 
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +22,8 @@ from jax.experimental import pallas as pl
 _LANES = 128
 
 
-def _minscan_body(slab_axis, d_ref, alive_row_ref, alive_col_ref, min_ref, idx_ref):
-    i = pl.program_id(slab_axis)
+def _minscan_kernel(d_ref, alive_row_ref, alive_col_ref, min_ref, idx_ref):
+    i = pl.program_id(0)
     d = d_ref[...]                              # (bm, n) float32
     bm, n = d.shape
     row_live = alive_row_ref[...] != 0          # (1, bm)
@@ -48,12 +48,6 @@ def _minscan_body(slab_axis, d_ref, alive_row_ref, alive_col_ref, min_ref, idx_r
 
     min_ref[...] = jnp.full((1, _LANES), v, jnp.float32)
     idx_ref[...] = jnp.full((1, _LANES), flat, jnp.int32)
-
-
-#: single-problem kernel — slab index is grid axis 0
-_minscan_kernel = partial(_minscan_body, 0)
-#: batched kernel — grid is (batch, slab); slab index is grid axis 1
-_minscan_kernel_batched = partial(_minscan_body, 1)
 
 
 def masked_argmin_pallas(
@@ -95,47 +89,3 @@ def masked_argmin_pallas(
 
     slab = jnp.argmin(mins[:, 0])               # first slab wins ties
     return mins[slab, 0], idxs[slab, 0]
-
-
-def masked_argmin_batch_pallas(
-    D: jax.Array,
-    alive: jax.Array,
-    *,
-    block_m: int = 256,
-    interpret: bool = False,
-):
-    """Batched masked (min, flat-argmin) — one independent problem per grid row.
-
-    ``D`` is ``(B, n, n)``, ``alive`` is ``(B, n)``; the kernel grid gains a
-    leading *batch* dimension (``grid=(B, n // block_m)``) so every problem's
-    row slabs are scanned by the same compiled kernel.  Returns
-    ``(mins (B,), flats (B,))`` with per-problem row-major tie-breaking,
-    bit-identical to :func:`masked_argmin_pallas` applied problem-by-problem.
-    """
-    B, n = D.shape[0], D.shape[1]
-    assert D.shape == (B, n, n) and n % block_m == 0, (D.shape, block_m)
-    alive_f = alive.astype(jnp.float32).reshape(B, 1, n)
-
-    grid = (B, n // block_m)
-    mins, idxs = pl.pallas_call(
-        _minscan_kernel_batched,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((None, block_m, n), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((None, 1, block_m), lambda b, i: (b, 0, i)),
-            pl.BlockSpec((None, 1, n), lambda b, i: (b, 0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((None, 1, _LANES), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((None, 1, _LANES), lambda b, i: (b, i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, n // block_m, _LANES), jnp.float32),
-            jax.ShapeDtypeStruct((B, n // block_m, _LANES), jnp.int32),
-        ],
-        interpret=interpret,
-    )(D, alive_f, alive_f)
-
-    slab = jnp.argmin(mins[:, :, 0], axis=1)    # (B,) first slab wins ties
-    take = lambda a: jnp.take_along_axis(a[:, :, 0], slab[:, None], axis=1)[:, 0]
-    return take(mins), take(idxs)

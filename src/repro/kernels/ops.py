@@ -2,22 +2,32 @@
 
 Handles padding/alignment (TPU lane multiples), selects interpret mode
 automatically on CPU (the kernels are *targeted* at TPU and *validated*
-in interpret mode here), and provides ``lance_williams_kernelized`` — the
-serial LW engine with both inner loops (min-scan, row update) running
-through the kernels.
+in interpret mode here), and provides ``lance_williams_kernelized`` —
+the unified merge loop (:mod:`repro.core.engine`) composed with the
+Pallas min-scan argmin op and the Pallas ``lw_update`` update op.  The
+batched variant is the same composition under ``vmap``: the
+``pallas_call`` batching rule prepends the batch as a leading grid
+dimension, i.e. the ``grid=(B, slabs)`` schedule, with no dedicated
+batch kernels.
 """
 
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import (
+    VARIANTS,
+    LWResult,
+    resolve_n_steps,
+    run_kernel,
+    symmetrize,
+)
 from repro.core.linkage import METHODS
-from repro.kernels.lw_update import lw_update_batch_pallas, lw_update_pallas
-from repro.kernels.minscan import masked_argmin_batch_pallas, masked_argmin_pallas
+from repro.kernels.lw_update import lw_update_pallas
+from repro.kernels.minscan import masked_argmin_pallas
 from repro.kernels.pairwise import pairwise_sq_euclidean_pallas
 
 
@@ -73,7 +83,9 @@ def lw_update(method: str, d_ki, d_kj, d_ij, n_i, n_j, sizes, keep, *,
               block_n: int = 2048):
     """Padded fused LW row update via the kernel."""
     n = d_ki.shape[0]
-    pad = lambda a: _pad_to(jnp.asarray(a, jnp.float32), 128, axis=0)
+    def pad(a):
+        return _pad_to(jnp.asarray(a, jnp.float32), 128, axis=0)
+
     bn = min(block_n, pad(d_ki).shape[0])
     out = lw_update_pallas(
         method,
@@ -84,138 +96,133 @@ def lw_update(method: str, d_ki, d_kj, d_ij, n_i, n_j, sizes, keep, *,
     return out[:n]
 
 
-class _KResult(NamedTuple):
-    merges: jax.Array
+# ---------------------------------------------------------------------------
+# the kernelized engine compositions
+# ---------------------------------------------------------------------------
 
 
-@partial(jax.jit, static_argnames=("method", "block_m"))
-def lance_williams_kernelized(D: jax.Array, method: str = "complete", *,
-                              block_m: int = 256) -> _KResult:
-    """Serial LW with Pallas inner loops (min-scan + fused row update).
-
-    Bit-compatible with :func:`repro.core.lance_williams.lance_williams`
-    (same masking, same row-major tie-breaking) — validated in tests.
-    """
+def _check(method: str, variant: str) -> None:
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
-    D = jnp.asarray(D, jnp.float32)
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; pick from {VARIANTS}")
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "method", "variant", "stop_at_k", "with_threshold", "block_m",
+    ),
+)
+def _kernelized_run(D, threshold, *, method, variant, stop_at_k,
+                    with_threshold, block_m):
+    D = symmetrize(D)
     n = D.shape[0]
-    upper = jnp.triu(D, k=1)
-    D = jnp.where(jnp.any(jnp.tril(D, k=-1) != 0), D, upper + upper.T)
-    D = 0.5 * (D + D.T) * (1.0 - jnp.eye(n))
 
-    # pad once so every kernel call inside the loop is aligned
+    # pad once so every kernel call inside the loop is lane-aligned
     npad = n + ((-n) % 128)
-    bm = block_m if npad % block_m == 0 else 128
     Dp = jnp.zeros((npad, npad), jnp.float32).at[:n, :n].set(D)
-    alive0 = jnp.arange(npad) < n
-    sizes0 = alive0.astype(jnp.float32)
-    ks = jnp.arange(npad)
-    interp = _interpret()
+    return run_kernel(
+        Dp,
+        jnp.arange(npad) < n,
+        method=method,
+        n_steps=resolve_n_steps(n, stop_at_k),
+        variant=variant,
+        distance_threshold=threshold if with_threshold else None,
+        block_m=block_m,
+        interpret=_interpret(),
+    )
 
-    def step(t, state):
-        Dp, alive, sizes, merges = state
-        v, flat = masked_argmin_pallas(
-            Dp, alive.astype(jnp.float32), block_m=bm, interpret=interp
+
+def lance_williams_kernelized(
+    D: jax.Array,
+    method: str = "complete",
+    *,
+    variant: str = "baseline",
+    stop_at_k: int = 1,
+    distance_threshold: float | None = None,
+    block_m: int = 256,
+) -> LWResult:
+    """Serial LW with Pallas inner loops (min-scan + fused row update).
+
+    Merge indices are bit-compatible with
+    :func:`repro.core.lance_williams.lance_williams` (same masking, same
+    row-major tie-breaking) with float-tolerance distances — validated in
+    tests.  ``variant``/``stop_at_k``/``distance_threshold`` behave as on
+    every other backend (engine-level features; the threshold value is a
+    traced operand, so it never triggers a recompile).
+    """
+    _check(method, variant)
+    return _kernelized_run(
+        D,
+        jnp.float32(0.0 if distance_threshold is None else distance_threshold),
+        method=method,
+        variant=variant,
+        stop_at_k=stop_at_k,
+        with_threshold=distance_threshold is not None,
+        block_m=block_m,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "method", "n_steps", "variant", "with_threshold", "block_m",
+    ),
+)
+def _kernelized_batch_run(Db, n_real, threshold, *, method, n_steps, variant,
+                          with_threshold, block_m):
+    Db = symmetrize(Db)
+    B, n_pad = Db.shape[0], Db.shape[1]
+
+    # pad once so every kernel call inside the loop is lane-aligned
+    npad = n_pad + ((-n_pad) % 128)
+    Dp = jnp.zeros((B, npad, npad), jnp.float32).at[:, :n_pad, :n_pad].set(Db)
+    alive0 = jnp.arange(npad)[None, :] < n_real[:, None]
+
+    def run(D, alive):
+        return run_kernel(
+            D,
+            alive,
+            method=method,
+            n_steps=n_steps,
+            variant=variant,
+            distance_threshold=threshold if with_threshold else None,
+            block_m=block_m,
+            interpret=_interpret(),
         )
-        r, c = flat // npad, flat % npad
-        i, j = jnp.minimum(r, c), jnp.maximum(r, c)
-        keep = alive & (ks != i) & (ks != j)
-        new = lw_update_pallas(
-            method, Dp[:, i], Dp[:, j], v, sizes[i], sizes[j], sizes,
-            keep.astype(jnp.float32), block_n=min(2048, npad), interpret=interp,
-        )
-        Dp = Dp.at[i, :].set(new).at[:, i].set(new).at[i, i].set(0.0)
-        new_size = sizes[i] + sizes[j]
-        alive = alive.at[j].set(False)
-        sizes = sizes.at[i].set(new_size).at[j].set(0.0)
-        merges = merges.at[t].set(
-            jnp.stack([i.astype(jnp.float32), j.astype(jnp.float32), v, new_size])
-        )
-        return (Dp, alive, sizes, merges)
 
-    merges0 = jnp.zeros((n - 1, 4), jnp.float32)
-    _, _, _, merges = jax.lax.fori_loop(0, n - 1, step, (Dp, alive0, sizes0, merges0))
-    return _KResult(merges=merges)
+    return jax.vmap(run)(Dp, alive0)
 
 
-@partial(jax.jit, static_argnames=("method", "n_steps", "block_m"))
 def lance_williams_kernelized_batch(
     Db: jax.Array,
     n_real: jax.Array,
     *,
     method: str = "complete",
     n_steps: int,
+    variant: str = "baseline",
+    distance_threshold: float | None = None,
     block_m: int = 256,
-) -> jax.Array:
-    """Batched serial LW with Pallas inner loops over a *batch grid dim*.
+) -> LWResult:
+    """Batched serial LW with Pallas inner loops — ``vmap`` of the
+    single-problem composition.
 
-    ``Db`` is ``(B, n_pad, n_pad)`` stacked problems (slots ``>= n_real[b]``
-    dead from birth); both kernels run with ``grid=(B, slabs)`` so every
-    problem is processed by one compiled kernel launch per step.  Returns
-    the ``(B, n_steps, 4)`` merge buffer; rows past ``n_real[b] - 1`` are
-    zero (the ragged guard of the vmap engine, DESIGN.md §9).
+    ``Db`` is ``(B, n_pad, n_pad)`` stacked problems (slots
+    ``>= n_real[b]`` dead from birth).  The ``pallas_call`` batching rule
+    turns each kernel invocation into one launch with a leading batch
+    grid dimension.  Returns batched ``LWResult``: ``(B, n_steps, 4)``
+    merges (rows past problem ``b``'s real merges are garbage — the
+    scheduler slices them off) and ``(B,)`` merge counts.
     """
-    from repro.core.batched import _prepare_batch
-
-    if method not in METHODS:
-        raise ValueError(f"unknown linkage method {method!r}")
-    Db = _prepare_batch(jnp.asarray(Db, jnp.float32))
-    B, n_pad = Db.shape[0], Db.shape[1]
-
-    # pad once so every kernel call inside the loop is lane-aligned
-    npad = n_pad + ((-n_pad) % 128)
-    bm = block_m if npad % block_m == 0 else 128
-    Dp = jnp.zeros((B, npad, npad), jnp.float32).at[:, :n_pad, :n_pad].set(Db)
-    alive0 = jnp.arange(npad)[None, :] < n_real[:, None]
-    sizes0 = alive0.astype(jnp.float32)
-    ks = jnp.arange(npad)
-    interp = _interpret()
-    f32 = jnp.float32
-
-    def step(t, state):
-        Dp, alive, sizes, merges = state
-        v, flat = masked_argmin_batch_pallas(
-            Dp, alive.astype(f32), block_m=bm, interpret=interp
-        )
-        r, c = flat // npad, flat % npad
-        i, j = jnp.minimum(r, c), jnp.maximum(r, c)          # (B,)
-        keep = alive & (ks[None, :] != i[:, None]) & (ks[None, :] != j[:, None])
-
-        take_col = lambda idx: jnp.take_along_axis(
-            Dp, idx[:, None, None], axis=2
-        )[:, :, 0]                                           # (B, npad)
-        take_sz = lambda idx: jnp.take_along_axis(sizes, idx[:, None], axis=1)[:, 0]
-        d_ki, d_kj = take_col(i), take_col(j)
-        n_i, n_j = take_sz(i), take_sz(j)
-        new = lw_update_batch_pallas(
-            method, d_ki, d_kj, v, n_i, n_j, sizes, keep,
-            block_n=min(2048, npad), interpret=interp,
-        )
-
-        def upd(D, ii, row):
-            return D.at[ii, :].set(row).at[:, ii].set(row).at[ii, ii].set(0.0)
-
-        Dp2 = jax.vmap(upd)(Dp, i, new)
-        new_size = n_i + n_j
-        alive2 = jax.vmap(lambda a, jj: a.at[jj].set(False))(alive, j)
-        sizes2 = jax.vmap(
-            lambda s, ii, jj, ns: s.at[ii].set(ns).at[jj].set(0.0)
-        )(sizes, i, j, new_size)
-        rec = jnp.stack([i.astype(f32), j.astype(f32), v, new_size], axis=1)
-        merges2 = merges.at[:, t, :].set(rec)
-
-        act = t < n_real - 1                                  # (B,) ragged guard
-        a1, a2, a3 = act[:, None, None], act[:, None], act[:, None, None]
-        return (
-            jnp.where(a1, Dp2, Dp),
-            jnp.where(a2, alive2, alive),
-            jnp.where(a2, sizes2, sizes),
-            jnp.where(a3, merges2, merges),
-        )
-
-    merges0 = jnp.zeros((B, n_steps, 4), f32)
-    _, _, _, merges = jax.lax.fori_loop(
-        0, n_steps, step, (Dp, alive0, sizes0, merges0)
+    _check(method, variant)
+    return _kernelized_batch_run(
+        Db,
+        n_real,
+        jnp.float32(0.0 if distance_threshold is None else distance_threshold),
+        method=method,
+        n_steps=n_steps,
+        variant=variant,
+        with_threshold=distance_threshold is not None,
+        block_m=block_m,
     )
-    return merges

@@ -8,7 +8,6 @@ mesh.  ``CompiledStep.lower(...)`` is what the multi-pod dry-run calls.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

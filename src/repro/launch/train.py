@@ -18,11 +18,9 @@ Typical runs::
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager

@@ -129,7 +129,7 @@ def _flash_core(q, k, v, q_pos, k_pos, *, causal, window, softcap, scale,
         qblk, qpos = args                              # (b, qb, n, g, d), (b, qb)
 
         def kv_step(carry, inp):
-            m, l, acc = carry
+            m, lse, acc = carry
             kblk, vblk, kpos = inp                     # (b, kb, n, d) ×2, (b, kb)
             s = jnp.einsum("bqngd,bknd->bngqk", qblk, kblk)
             if softcap:
@@ -140,7 +140,7 @@ def _flash_core(q, k, v, q_pos, k_pos, *, causal, window, softcap, scale,
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + jnp.sum(p, axis=-1)
+            l_new = lse * corr + jnp.sum(p, axis=-1)
             acc_new = acc * corr[..., None] + jnp.einsum("bngqk,bknd->bngqd", p, vblk)
             return (m_new, l_new, acc_new), None
 
@@ -150,11 +150,11 @@ def _flash_core(q, k, v, q_pos, k_pos, *, causal, window, softcap, scale,
         m0 = zq[..., 0] + NEG_INF
         l0 = zq[..., 0]
         a0 = zq
-        (m, l, acc), _ = jax.lax.scan(
+        (m, lse, acc), _ = jax.lax.scan(
             kv_step, (m0, l0, a0),
             (jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0), jnp.moveaxis(kp, 1, 0)),
         )
-        out = acc / jnp.maximum(l[..., None], 1e-30)   # (b, n, g, qb, d)
+        out = acc / jnp.maximum(lse[..., None], 1e-30)  # (b, n, g, qb, d)
         return jnp.moveaxis(out, 3, 1)                 # (b, qb, n, g, d)
 
     out = jax.lax.map(jax.checkpoint(per_qblock), (qf, qp))  # (nq, b, qb, n, g, d)
@@ -254,9 +254,9 @@ def _partials(qg, k, v, q_pos, k_pos, *, window, softcap, causal=True):
     s = s + msk[:, None, None, :, :]
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])
-    l = jnp.sum(p, axis=-1)
+    lse = jnp.sum(p, axis=-1)
     acc = jnp.einsum("bngqk,bknd->bngqd", p, v.astype(jnp.float32))
-    return m, l, acc
+    return m, lse, acc
 
 
 def _decode_body(q, k, v, q_pos, k_pos, k_self, v_self, *, window, softcap,
@@ -275,9 +275,9 @@ def _decode_body(q, k, v, q_pos, k_pos, k_self, v_self, *, window, softcap,
     if kv_axes:
         m = jax.lax.pmax(m_l, kv_axes)
         corr = jnp.exp(m_l - m)
-        l, acc = jax.lax.psum((l_l * corr, acc_l * corr[..., None]), kv_axes)
+        lse, acc = jax.lax.psum((l_l * corr, acc_l * corr[..., None]), kv_axes)
     else:
-        m, l, acc = m_l, l_l, acc_l
+        m, lse, acc = m_l, l_l, acc_l
 
     if has_self:
         # self tokens are always in-window and causal-valid for themselves
@@ -285,10 +285,10 @@ def _decode_body(q, k, v, q_pos, k_pos, k_self, v_self, *, window, softcap,
                                     window=window, softcap=softcap)
         m2 = jnp.maximum(m, m_s)
         c1, c2 = jnp.exp(m - m2), jnp.exp(m_s - m2)
-        l = l * c1 + l_s * c2
+        lse = lse * c1 + l_s * c2
         acc = acc * c1[..., None] + acc_s * c2[..., None]
 
-    out = acc / jnp.maximum(l[..., None], 1e-30)       # (b, n, g, q, d)
+    out = acc / jnp.maximum(lse[..., None], 1e-30)     # (b, n, g, q, d)
     return jnp.moveaxis(out, 3, 1).reshape(b, sq, h, d).astype(q.dtype)
 
 

@@ -5,7 +5,7 @@ activations and MLPs.  Functional style — a model is (param_specs, apply).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 import jax

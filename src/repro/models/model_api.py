@@ -12,7 +12,6 @@ The launch layer (train/serve/dryrun) builds its jitted steps on these.
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

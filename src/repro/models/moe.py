@@ -128,9 +128,6 @@ def _moe_ep(x, wr, wg, wu, wd, *, top_k: int, cap_frac: float, act: str,
     b, s, d = x.shape
     t = b * s
     xt = x.reshape(t, d)
-    me = jax.lax.axis_index("model")
-    my_expert = me // fs
-
     def reshard_weight(w, f_axis):
         # w local: (E, d/16, f/16) (or (E, f/16, d/16) for w_down).
         # gather the FSDP 'data' axis first (small), then all_to_all the

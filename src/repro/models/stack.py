@@ -17,7 +17,6 @@ import math
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.models.common import ParamSpec, is_spec
 

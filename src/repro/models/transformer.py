@@ -135,11 +135,11 @@ def layer_meta(cfg: ModelConfig, n_layers: int):
     if cfg.window and not cfg.local_global_period:
         window[:] = cfg.window                    # uniform SWA (mixtral)
     if cfg.local_global_period:
-        for l in range(n_layers):
-            is_global = (l + 1) % cfg.local_global_period == 0
-            window[l] = 0 if is_global else cfg.window
+        for layer in range(n_layers):
+            is_global = (layer + 1) % cfg.local_global_period == 0
+            window[layer] = 0 if is_global else cfg.window
             if cfg.rope_theta_global and is_global:
-                theta[l] = cfg.rope_theta_global
+                theta[layer] = cfg.rope_theta_global
     return jnp.asarray(theta), jnp.asarray(window)
 
 

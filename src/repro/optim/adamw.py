@@ -12,7 +12,6 @@ distributed-memory trick selected per arch via ``cfg.opt_state_dtype``.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
@@ -139,7 +138,9 @@ class AdamW(NamedTuple):
         c1 = 1.0 - self.b1 ** step.astype(jnp.float32)
         c2 = 1.0 - self.b2 ** step.astype(jnp.float32)
 
-        is_q = lambda x: isinstance(x, QTensor)
+        def is_q(x):
+            return isinstance(x, QTensor)
+
 
         def upd(p, g, m_enc, v_enc):
             m = self.b1 * _decode(m_enc, self.state_dtype) + (1 - self.b1) * g

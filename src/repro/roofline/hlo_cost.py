@@ -25,7 +25,6 @@ Everything here is per-DEVICE (the module is the SPMD-partitioned one).
 
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 

@@ -84,8 +84,8 @@ def test_batch_result_api(rng):
     assert len(batch) == 2
     assert [r.n for r in batch] == [6, 10]
     labels = batch.labels(3)
-    assert [len(l) for l in labels] == [6, 10]
-    assert all(l.max() + 1 == 3 for l in labels)
+    assert [len(lab) for lab in labels] == [6, 10]
+    assert all(lab.max() + 1 == 3 for lab in labels)
     assert batch.stats.engine == "serial"
     assert sum(cnt for _, cnt in batch.stats.buckets) == 2
     # n=6 -> bucket 8 (B_pad 1), n=10 -> bucket 16 (B_pad 1)

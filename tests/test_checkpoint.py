@@ -1,7 +1,6 @@
 """Checkpoint manager: atomicity, retention, resume, elastic remesh."""
 
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

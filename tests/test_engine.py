@@ -1,0 +1,312 @@
+"""The unified engine's (backend × variant × early-stop) contract.
+
+Acceptance bar for the engine-core refactor (DESIGN.md §3): every public
+backend is a thin composition of ONE merge-loop implementation, so
+
+* the ``rowmin``/``lazy`` cached-argmin variants must be **bit-identical**
+  to ``baseline`` on the jnp backends (serial + batched) and
+  index-identical on the kernel backend, for every linkage method;
+* ``stop_at_k`` output must be the **exact prefix** of the full run's
+  merge list (the trip count shrinks statically — no arithmetic changes);
+* ``distance_threshold`` must stop exactly before the first merge whose
+  distance exceeds the threshold.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import METHODS, VARIANTS, cluster, cluster_batch, default_metric
+from repro.core.dendrogram import validate_merges
+from repro.core.lance_williams import lance_williams
+from tests.conftest import random_distance_matrix, run_with_devices
+
+NS = (7, 19, 33)
+
+
+def _D(rng, n, method="complete"):
+    return random_distance_matrix(
+        rng, n, squared=method in ("centroid", "median", "ward")
+    )
+
+
+# ---------------------------------------------------------------------------
+# variant equivalence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("variant", ("rowmin", "lazy"))
+def test_serial_variants_bit_identical(method, variant, rng):
+    for n in NS:
+        D = _D(rng, n, method)
+        base = np.asarray(lance_williams(D, method).merges)
+        got = np.asarray(lance_williams(D, method, variant=variant).merges)
+        np.testing.assert_array_equal(got, base)
+
+
+@pytest.mark.parametrize("variant", ("rowmin", "lazy"))
+def test_kernel_variants_identical_to_kernel_baseline(variant, rng):
+    from repro.kernels.ops import lance_williams_kernelized
+
+    D = _D(rng, 26)
+    base = np.asarray(lance_williams_kernelized(D, "complete").merges)
+    got = np.asarray(
+        lance_williams_kernelized(D, "complete", variant=variant).merges
+    )
+    np.testing.assert_array_equal(got, base)
+
+
+@pytest.mark.parametrize("variant", ("rowmin", "lazy"))
+def test_batched_variants_bit_identical(variant, rng):
+    mats = [_D(rng, n) for n in (5, 12, 19, 8)]
+    base = cluster_batch(mats, "complete", backend="serial")
+    got = cluster_batch(mats, "complete", backend="serial", variant=variant)
+    for g, b in zip(got, base):
+        np.testing.assert_array_equal(g.merges, b.merges)
+
+
+def test_variant_ties_duplicate_points(rng):
+    """Exact-zero ties (duplicate docs) must not break the cached argmin's
+    row-major first-min tie-breaking."""
+    X = rng.normal(size=(14, 3))
+    X[4] = X[0]
+    X[9] = X[2]
+    X[10] = X[2]
+    D = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
+    base = np.asarray(lance_williams(D, "single").merges)
+    for variant in ("rowmin", "lazy"):
+        got = np.asarray(lance_williams(D, "single", variant=variant).merges)
+        np.testing.assert_array_equal(got, base)
+
+
+def test_unknown_variant_raises(rng):
+    with pytest.raises(ValueError, match="unknown variant"):
+        lance_williams(_D(rng, 6), "complete", variant="nope")
+    with pytest.raises(ValueError, match="unknown variant"):
+        cluster_batch([_D(rng, 6)], "complete", variant="nope")
+
+
+# ---------------------------------------------------------------------------
+# early termination
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ("serial", "kernel"))
+def test_stop_at_k_is_exact_prefix(backend, rng):
+    D = _D(rng, 21)
+    full = cluster(D, "complete", backend=backend)
+    for k in (2, 5, 20, 21):
+        res = cluster(D, "complete", backend=backend, stop_at_k=k)
+        assert res.n == 21
+        assert res.n_merges == 21 - k
+        np.testing.assert_array_equal(res.merges, full.merges[: 21 - k])
+        validate_merges(res.merges, n=21)
+        if k < 21:
+            labels = res.labels(k)
+            assert labels.max() + 1 == k
+
+
+@pytest.mark.parametrize("backend", ("serial", "kernel"))
+def test_distance_threshold_is_exact_prefix(backend, rng):
+    D = _D(rng, 24)
+    full = np.asarray(cluster(D, "complete", backend=backend).merges)
+    thr = float(full[11, 2])          # stop strictly after merge 11
+    res = cluster(D, "complete", backend=backend, distance_threshold=thr)
+    nm = res.n_merges
+    np.testing.assert_array_equal(res.merges, full[:nm])
+    assert np.all(res.merges[:, 2] <= thr)
+    assert full[nm, 2] > thr
+
+
+def test_stop_at_k_and_threshold_compose(rng):
+    D = _D(rng, 20)
+    full = np.asarray(cluster(D, "complete", backend="serial").merges)
+    # threshold binds first
+    thr = float(full[5, 2])
+    res = cluster(D, "complete", backend="serial", stop_at_k=2,
+                  distance_threshold=thr)
+    assert res.n_merges == 6 and np.all(res.merges[:, 2] <= thr)
+    # stop_at_k binds first
+    res = cluster(D, "complete", backend="serial", stop_at_k=15,
+                  distance_threshold=float(full[-1, 2]))
+    assert res.n_merges == 5
+    np.testing.assert_array_equal(res.merges, full[:5])
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_batched_stop_at_k_prefix_ragged(variant, rng):
+    mats = [_D(rng, n) for n in (5, 9, 17, 26)]
+    full = cluster_batch(mats, "complete", backend="serial")
+    res = cluster_batch(mats, "complete", backend="serial",
+                        variant=variant, stop_at_k=3)
+    for r, f, m in zip(res, full, mats):
+        n = m.shape[0]
+        assert r.n == n and r.n_merges == n - 3
+        np.testing.assert_array_equal(r.merges, np.asarray(f.merges)[: n - 3])
+    labels = res.labels(3)
+    assert all(lab.max() + 1 == 3 for lab in labels)
+
+
+def test_batched_threshold_prefix_ragged(rng):
+    mats = [_D(rng, n) for n in (6, 13, 22)]
+    full = cluster_batch(mats, "complete", backend="serial")
+    thr = float(np.asarray(full[1].merges)[6, 2])
+    res = cluster_batch(mats, "complete", backend="serial",
+                        distance_threshold=thr)
+    for r, f in zip(res, full):
+        fm = np.asarray(f.merges)
+        nm = r.n_merges
+        np.testing.assert_array_equal(r.merges, fm[:nm])
+        assert np.all(r.merges[:, 2] <= thr)
+        if nm < len(fm):
+            assert fm[nm, 2] > thr
+
+
+def test_batched_kernel_threshold_prefix(rng):
+    """while_loop-under-vmap wrapped around pallas_call (interpret mode)."""
+    mats = [_D(rng, n) for n in (6, 11, 14)]
+    full = cluster_batch(mats, "complete", backend="kernel")
+    thr = float(np.asarray(full[1].merges)[5, 2])
+    res = cluster_batch(mats, "complete", backend="kernel",
+                        distance_threshold=thr)
+    for r, f in zip(res, full):
+        fm = np.asarray(f.merges)
+        nm = r.n_merges
+        np.testing.assert_array_equal(r.merges, fm[:nm])
+        assert np.all(r.merges[:, 2] <= thr)
+        if nm < len(fm):
+            assert fm[nm, 2] > thr
+
+
+def test_threshold_value_does_not_recompile(rng):
+    """The threshold is a traced operand: distinct dedup radii must share
+    one compiled loop (only the None-vs-set switch is structural)."""
+    from repro.core.lance_williams import _run as jitted_run
+
+    D = _D(rng, 20)
+    full = np.asarray(lance_williams(D, "complete").merges)
+    if not hasattr(jitted_run, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    before = jitted_run._cache_size()
+    sizes = []
+    for t in (10, 14, 17):
+        thr = float(full[t, 2])
+        res = lance_williams(D, "complete", distance_threshold=thr)
+        nm = int(res.n_merges)
+        np.testing.assert_array_equal(np.asarray(res.merges)[:nm], full[:nm])
+        sizes.append(jitted_run._cache_size())
+    assert sizes[-1] - before == 1, (before, sizes)
+
+
+def test_stop_validation(rng):
+    D = _D(rng, 8)
+    with pytest.raises(ValueError, match="stop_at_k"):
+        cluster(D, "complete", backend="serial", stop_at_k=0)
+    with pytest.raises(ValueError, match="stop_at_k"):
+        cluster_batch([D], "complete", stop_at_k=-1)
+
+
+def test_early_stopped_labels_floor(rng):
+    res = cluster(_D(rng, 12), "complete", backend="serial", stop_at_k=4)
+    with pytest.raises(ValueError, match="stopped early"):
+        res.labels(2)
+    assert res.labels(4).max() + 1 == 4
+    assert res.labels(12).max() + 1 == 12
+    assert res.linkage_matrix.shape == (8, 4)
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+
+def test_batch_labels_k_validation(rng):
+    batch = cluster_batch([_D(rng, 6), _D(rng, 10)], "complete",
+                          backend="serial")
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="positive"):
+            batch.labels(bad)
+    # large k clamps per problem at n one-item clusters
+    labels = batch.labels(999)
+    assert [len(lab) for lab in labels] == [6, 10]
+    assert [lab.max() + 1 for lab in labels] == [6, 10]
+
+
+def test_default_metric_single_source():
+    assert default_metric("complete") == "euclidean"
+    assert default_metric("single") == "euclidean"
+    for m in ("centroid", "median", "ward"):
+        assert default_metric(m) == "sqeuclidean"
+    with pytest.raises(ValueError, match="unknown linkage"):
+        default_metric("nope")
+
+
+def test_symmetrize_is_shared_input_path(rng):
+    """Upper-triangular input works identically on every dense backend."""
+    D = _D(rng, 11)
+    up = np.triu(D, 1)
+    want = np.asarray(cluster(D, "complete", backend="serial").merges)
+    got_serial = np.asarray(cluster(up, "complete", backend="serial").merges)
+    got_kernel = np.asarray(cluster(up, "complete", backend="kernel").merges)
+    got_batch = np.asarray(
+        cluster_batch([up], "complete", backend="serial")[0].merges
+    )
+    np.testing.assert_array_equal(got_serial, want)
+    np.testing.assert_array_equal(got_batch, want)
+    np.testing.assert_array_equal(got_kernel[:, :2], want[:, :2])
+    np.testing.assert_allclose(got_kernel, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# distributed (collective primitives) — subprocess with real shards
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_distributed_variants_and_early_stop():
+    out = run_with_devices("""
+import numpy as np, jax
+from repro.core.lance_williams import lance_williams
+from repro.core.distributed import distributed_lance_williams, make_cluster_mesh
+mesh = make_cluster_mesh()
+rng = np.random.default_rng(7)
+X = rng.normal(size=(29, 5))
+D = np.sqrt(((X[:,None,:]-X[None,:,:])**2).sum(-1))
+full = np.asarray(lance_williams(D, "complete").merges)
+for variant in ("baseline", "rowmin", "lazy"):
+    r = distributed_lance_williams(D, "complete", mesh=mesh, variant=variant)
+    m = np.asarray(r.merges)
+    assert np.array_equal(m[:, :2], full[:, :2]), variant
+    assert np.allclose(m[:, 2], full[:, 2], rtol=1e-4, atol=1e-5)
+    # stop_at_k: exact prefix of the same backend's full run
+    rs = distributed_lance_williams(D, "complete", mesh=mesh,
+                                    variant=variant, stop_at_k=8)
+    assert int(rs.n_merges) == 21
+    assert np.array_equal(np.asarray(rs.merges), m[:21]), variant
+thr = float(full[10, 2])
+rt = distributed_lance_williams(D, "complete", mesh=mesh,
+                                distance_threshold=thr)
+nm = int(rt.n_merges)
+assert np.array_equal(np.asarray(rt.merges)[:nm], full[:nm])
+assert full[nm, 2] > thr >= full[nm - 1, 2]
+
+# batched distributed engine (while_loop under shard_map-over-problems)
+from repro.core import cluster, cluster_batch
+mats = []
+for n in (6, 11, 14, 7):
+    Xb = rng.normal(size=(n, 4))
+    mats.append(np.sqrt(((Xb[:, None] - Xb[None]) ** 2).sum(-1)))
+fulls = [np.asarray(cluster(m, "complete", backend="serial").merges)
+         for m in mats]
+thr_b = float(fulls[1][5, 2])
+batch = cluster_batch(mats, "complete", backend="distributed", mesh=mesh,
+                      distance_threshold=thr_b)
+for r, fm in zip(batch, fulls):
+    nm = r.n_merges
+    assert np.array_equal(r.merges, fm[:nm])
+    assert np.all(r.merges[:, 2] <= thr_b)
+    if nm < len(fm):
+        assert fm[nm, 2] > thr_b
+print("DIST_ENGINE_OK")
+""", n_devices=4)
+    assert "DIST_ENGINE_OK" in out

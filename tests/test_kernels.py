@@ -3,7 +3,6 @@
 Each kernel is TPU-targeted (pl.pallas_call + BlockSpec) and validated here
 in interpret mode on CPU per the assignment."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -64,7 +64,7 @@ try:
 except SystemExit as e:
     assert e.code in (0, None), e.code
 import json
-rec = [json.loads(l) for l in open("/tmp/dr_test.jsonl")][-1]
+rec = [json.loads(line) for line in open("/tmp/dr_test.jsonl")][-1]
 assert rec["status"] == "ok", rec
 assert rec["chips"] == 256
 assert rec["roofline"]["flops_per_device"] > 0

@@ -2,19 +2,13 @@
 restores exactly; straggler monitor fires."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.data.pipeline import TokenPipeline
-from repro.distributed.fault import (
-    FailurePlan,
-    SimulatedFailure,
-    StepDeadline,
-    run_resilient_loop,
-)
+from repro.distributed.fault import FailurePlan, StepDeadline, run_resilient_loop
 from repro.launch.steps import make_optimizer, make_train_step
 from repro.models import model_api
 
