@@ -1,0 +1,84 @@
+"""Service steady-state bench: throughput, latency tails, recompile count.
+
+Measures the DESIGN.md §10 serving path end to end — warmup compiles
+the declared working set, then a timed open-loop Poisson load of ragged
+problems (sizes drawn from inside the declared buckets) runs through
+the micro-batching front-end.  The derived column carries the §10
+invariant: ``steady_compiles`` and ``steady_jit_growth`` must both be
+ZERO after warmup, and the bench **fails** (non-zero exit through
+``run.py``) if they are not — the CI smoke step is a recompile
+regression gate, not just a timing readout.
+
+    PYTHONPATH=src python benchmarks/bench_service.py [--smoke] [--rate R]
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def main(rate: float = 300.0, duration: float = 3.0, smoke: bool = False):
+    from repro.service.batcher import ServiceConfig
+    from repro.service.server import drive
+
+    if smoke:
+        rate, duration = 100.0, 1.0
+    config = ServiceConfig(
+        method="complete",
+        engine="serial",
+        max_batch=8,
+        max_delay_ms=2.0,
+        bucket_ns=(8, 16, 32),
+    )
+    report = drive(
+        config,
+        rate_hz=rate,
+        duration_s=duration,
+        sizes=(5, 8, 12, 20, 27),
+        seed=0,
+    )
+    s = report.snapshot
+    us_per_req = (
+        report.elapsed_s / report.n_submitted * 1e6 if report.n_submitted else 0.0
+    )
+    print("name,us_per_call,derived")
+    print(f"service_throughput,{us_per_req:.0f},"
+          f"{report.throughput_rps:.1f}req/s")
+    print(f"service_p50,{s.p50_ms * 1e3:.0f},latency_p50")
+    print(f"service_p99,{s.p99_ms * 1e3:.0f},latency_p99")
+    print(f"service_batching,{0:.0f},mean_batch={s.mean_batch_size:.2f};"
+          f"pad_waste={s.pad_waste:.2f}")
+    print(f"service_cache,{0:.0f},hit_rate={s.cache_hit_rate:.3f};"
+          f"warmup_compiles={report.warmup_compiles}")
+    print(f"service_steady_compiles,{0:.0f},"
+          f"aot={report.steady_compiles};jit={report.steady_jit_growth}")
+    if report.n_errors or report.n_unresolved:
+        raise RuntimeError(
+            f"{report.n_errors} requests failed, "
+            f"{report.n_unresolved} never resolved"
+        )
+    if report.steady_compiles or report.steady_jit_growth:
+        raise RuntimeError(
+            "steady-state traffic compiled after warmup "
+            f"(aot={report.steady_compiles}, jit={report.steady_jit_growth}) "
+            "— the §10 zero-recompile invariant regressed"
+        )
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rate", type=float, default=300.0)
+    ap.add_argument("--duration", type=float, default=3.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short run; verifies the zero-recompile gate")
+    a = ap.parse_args()
+    main(rate=a.rate, duration=a.duration, smoke=a.smoke)

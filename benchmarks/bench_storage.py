@@ -28,7 +28,14 @@ print(json.dumps({{"p": p, "bytes_per_device": per_dev[0][1],
 
 
 def run(n: int = 1968, procs=(1, 2, 4, 8, 16)):
-    rows = []
+    """Probe each device count in a subprocess.
+
+    Returns ``(rows, failures)``.  A failing probe surfaces its stderr
+    (and unparseable stdout) on *our* stderr and is recorded in
+    ``failures`` — the remaining device counts still run, so one broken
+    configuration can't silently erase the whole sweep.
+    """
+    rows, failures = [], []
     for p in procs:
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={p}"
@@ -38,18 +45,42 @@ def run(n: int = 1968, procs=(1, 2, 4, 8, 16)):
                              capture_output=True, text=True, env=env,
                              timeout=300)
         if out.returncode != 0:
-            raise RuntimeError(out.stderr[-2000:])
-        rows.append(json.loads(out.stdout.strip().splitlines()[-1]))
-    return rows
+            sys.stderr.write(
+                f"bench_storage: p={p} probe failed "
+                f"(returncode {out.returncode}); stderr tail:\n"
+                f"{out.stderr[-2000:]}\n"
+            )
+            failures.append(p)
+            continue
+        try:
+            rows.append(json.loads(out.stdout.strip().splitlines()[-1]))
+        except (ValueError, IndexError):
+            sys.stderr.write(
+                f"bench_storage: p={p} probe printed no parseable row; "
+                f"stdout tail:\n{out.stdout[-500:]}\n"
+                f"stderr tail:\n{out.stderr[-2000:]}\n"
+            )
+            failures.append(p)
+    return rows, failures
 
 
 def main(n: int = 1968, procs=(1, 2, 4, 8, 16)):
-    rows = run(n, procs)
-    base = rows[0]["bytes_per_device"]
-    print("p,bytes_per_device,reduction_vs_serial")
-    for r in rows:
-        print(f"{r['p']},{r['bytes_per_device']},"
-              f"{base / r['bytes_per_device']:.2f}x")
+    rows, failures = run(n, procs)
+    if rows:
+        # the reduction baseline is the p=1 probe; if it failed, fall back
+        # to the smallest surviving p and say so in the header
+        base_row = min(rows, key=lambda r: r["p"])
+        base = base_row["bytes_per_device"]
+        base_name = ("serial" if base_row["p"] == 1
+                     else f"p{base_row['p']}")
+        print(f"p,bytes_per_device,reduction_vs_{base_name}")
+        for r in rows:
+            print(f"{r['p']},{r['bytes_per_device']},"
+                  f"{base / r['bytes_per_device']:.2f}x")
+    if failures:
+        raise RuntimeError(
+            f"storage probes failed for p in {failures} (stderr above)"
+        )
     return rows
 
 

@@ -9,6 +9,7 @@ Paper artifact → bench mapping:
   unified engine variant×early-stop    → bench_engine
   kernel hot-spots                     → bench_kernels
   batched multi-problem engine         → bench_batch (EXPERIMENTS.md §Batch)
+  online serving layer (DESIGN.md §10) → bench_service (EXPERIMENTS.md §Service)
   (arch × shape) roofline table        → roofline_report (reads dryrun.jsonl)
 
 Default sizes are CI-scale; pass --paper for the paper-scale n=1968 run.
@@ -40,6 +41,7 @@ def main() -> None:
         bench_kernels,
         bench_linkage,
         bench_scaling,
+        bench_service,
         bench_storage,
         bench_variants,
         roofline_report,
@@ -56,6 +58,8 @@ def main() -> None:
             n=512 if not args.paper else 1968, B=32),
         "batch": lambda: bench_batch.main(
             B=64, n=128 if not args.paper else 256),
+        "service": lambda: bench_service.main(
+            rate=300.0, duration=3.0 if not args.paper else 10.0),
         "scaling": lambda: bench_scaling.main(
             n=n_scale, procs=(1, 2, 4, 8) if not args.paper
             else (1, 2, 4, 8, 16)),

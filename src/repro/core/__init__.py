@@ -8,7 +8,12 @@ from repro.core.api import (
     cluster,
     cluster_batch,
 )
-from repro.core.batched import BatchStats, cluster_batch_merges
+from repro.core.batched import (
+    BatchStats,
+    BucketSignature,
+    bucket_signature,
+    cluster_batch_merges,
+)
 from repro.core.engine import VARIANTS
 from repro.core.lance_williams import LWResult, lance_williams, lance_williams_from_points
 from repro.core.linkage import METHODS, coefficients, default_metric, update_row
@@ -18,8 +23,10 @@ __all__ = [
     "VARIANTS",
     "BatchResult",
     "BatchStats",
+    "BucketSignature",
     "ClusterResult",
     "LWResult",
+    "bucket_signature",
     "build_distance_matrix",
     "cluster",
     "cluster_batch",

@@ -18,6 +18,7 @@ list.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Literal, Sequence
 
@@ -39,7 +40,12 @@ class ClusterResult:
     method: str
     backend: str
     n_leaves: int | None = None        # explicit n for early-stopped runs
-    linkage_matrix: np.ndarray = field(init=False)
+    # original points, when the input was points (enables centroids/assign)
+    points: np.ndarray | None = field(default=None, repr=False)
+    # the (n, n) matrix the tree was built on (enables exemplars)
+    distances: np.ndarray | None = field(default=None, repr=False)
+    metric: str | None = None          # metric used to embed points (None: raw matrix)
+    linkage_matrix: np.ndarray = field(init=False, repr=False)
 
     def __post_init__(self) -> None:
         if self.n_leaves is None:
@@ -65,6 +71,47 @@ class ClusterResult:
     def heights(self) -> np.ndarray:
         return dg.merge_heights(self.merges)
 
+    def _distance_matrix(self) -> np.ndarray:
+        # exemplars are medoids of the matrix the TREE saw, so raw stored
+        # input must pass through the same normalization every engine
+        # applies (mirror a triangle / average an asymmetric square, zero
+        # the diagonal) before any row sums are taken
+        from repro.core.engine import symmetrize
+
+        if self.distances is not None:
+            return np.asarray(symmetrize(self.distances))
+        if self.points is not None:
+            metric = self.metric or default_metric(self.method)
+            return np.asarray(symmetrize(build_distance_matrix(self.points, metric)))
+        raise ValueError(
+            "this ClusterResult kept neither points nor distances; build it "
+            "through cluster()/cluster_batch()/the service, or call "
+            "repro.core.dendrogram.cut_exemplars with your own matrix"
+        )
+
+    def exemplars(self, k: int) -> np.ndarray:
+        """Medoid leaf index per cluster of the ``k``-cut.
+
+        ``exemplars(k)[c]`` is the leaf whose summed distance to the rest
+        of cluster ``c`` is minimal — the per-cluster representative the
+        streaming-assignment service exports
+        (:mod:`repro.service.assign`): new points are labeled by one
+        distance call against ``k`` exemplars instead of a re-cluster.
+        """
+        _, ex = dg.cut_exemplars(self.merges, k, self._distance_matrix(), n=self.n)
+        return ex
+
+    def centroids(self, k: int) -> np.ndarray:
+        """Per-cluster mean of the stored input points at the ``k``-cut."""
+        if self.points is None or np.asarray(self.points).ndim != 2:
+            raise ValueError(
+                "centroids need the original (n, d) points — cluster points "
+                "(not a distance matrix) or use exemplars(k) instead"
+            )
+        X = np.asarray(self.points)
+        labels = self.labels(k)
+        return np.stack([X[labels == c].mean(axis=0) for c in range(k)])
+
 
 def build_distance_matrix(X, metric: str = "euclidean") -> jax.Array:
     X = np.asarray(X)
@@ -81,21 +128,61 @@ def build_distance_matrix(X, metric: str = "euclidean") -> jax.Array:
     raise ValueError(f"unknown metric {metric!r}")
 
 
-def _as_distance_matrix(data, method: str, metric: str | None):
-    """Shared input interpretation for ``cluster`` and ``cluster_batch``:
-    a square 2-D array with ``metric is None`` is already a distance
-    matrix; anything else is points embedded via *metric*, defaulting to
+def _interpret_input(data, method: str, metric: str | None,
+                     is_distance: bool | None = None):
+    """Shared input interpretation for ``cluster``, ``cluster_batch`` and
+    the service batcher: a square 2-D array with ``metric is None`` is
+    treated as a pre-built distance matrix; anything else is points
+    embedded via *metric*, defaulting to
     :func:`repro.core.linkage.default_metric` (scipy convention).
 
-    May return a jax array (built matrices stay on device for the
-    single-problem engines); ``cluster_batch`` converts to numpy for its
-    host-side bucket stacking."""
+    The square-with-no-metric case is ambiguous — ``(n, n)`` *points* in
+    ``n`` dimensions look exactly like a distance matrix.  ``is_distance``
+    disambiguates explicitly (the cheap check service callers should
+    use); when it is left ``None`` and the ambiguous interpretation
+    fires on a non-symmetric array, a ``UserWarning`` flags the likely
+    mistake (the engine would silently symmetrize it by averaging).
+
+    Returns ``(D, points, metric_used)`` — ``points``/``metric_used`` are
+    ``None`` for matrix input.  ``D`` may be a jax array (built matrices
+    stay on device for the single-problem engines); batch callers convert
+    to numpy for host-side bucket stacking."""
     arr = np.asarray(data)
-    if metric is None and arr.ndim == 2 and arr.shape[0] == arr.shape[1]:
-        return arr
+    looks_square = arr.ndim == 2 and arr.shape[0] == arr.shape[1]
+    if is_distance is None:
+        is_distance = metric is None and looks_square
+        # valid matrix forms stay silent: symmetric, or upper-triangle-only
+        # (engine.symmetrize mirrors the triangle — a documented input)
+        plausible_matrix = is_distance and (
+            arr.shape[0] <= 1
+            or np.allclose(arr, arr.T, rtol=1e-5, atol=1e-6)
+            or not np.any(np.tril(arr, k=-1))
+        )
+        if is_distance and not plausible_matrix:
+            warnings.warn(
+                "square (n, n) input with metric=None is interpreted as a "
+                "pre-built distance matrix, but this one is not symmetric "
+                "(the engine symmetrizes by averaging D and D.T). If it is "
+                "actually n points in n dimensions, pass is_distance=False "
+                "or an explicit metric; pass is_distance=True to silence "
+                "this warning.",
+                UserWarning,
+                stacklevel=3,
+            )
+    if is_distance:
+        if metric is not None:
+            raise ValueError(
+                f"is_distance=True conflicts with metric={metric!r}: a "
+                "pre-built distance matrix needs no embedding metric"
+            )
+        if not looks_square:
+            raise ValueError(
+                f"is_distance=True requires a square (n, n) matrix, got {arr.shape}"
+            )
+        return arr, None, None
     if metric is None:
         metric = default_metric(method)
-    return build_distance_matrix(arr, metric)
+    return build_distance_matrix(arr, metric), arr, metric
 
 
 def cluster(
@@ -103,26 +190,36 @@ def cluster(
     method: str = "complete",
     *,
     metric: str | None = None,
+    is_distance: bool | None = None,
     backend: Backend = "auto",
     mesh=None,
     variant: str = "baseline",
     stop_at_k: int = 1,
     distance_threshold: float | None = None,
+    keep_inputs: bool = True,
 ) -> ClusterResult:
     """Hierarchically cluster *data* with the Lance-Williams engine.
 
     data: ``(n, n)`` distance matrix (if square & ``metric is None``), or
         ``(n, d)`` points / ``(n, atoms, 3)`` conformations with a metric.
+    is_distance: explicit disambiguation of the square-input case —
+        ``True`` forces the distance-matrix reading, ``False`` forces the
+        points reading; ``None`` keeps the shape heuristic (which warns
+        on a non-symmetric square array).
     backend: ``serial`` (single device), ``distributed`` (paper's algorithm
         over all mesh devices), ``kernel`` (serial loop with Pallas inner
         ops), or ``auto`` (distributed iff >1 device).
     variant / stop_at_k / distance_threshold: engine-level knobs shared
         by every backend — argmin primitive and early termination.
+    keep_inputs: store the input points/distance matrix on the result
+        (enables ``exemplars``/``centroids`` and the streaming-assignment
+        export).  Pass ``False`` when accumulating many results — the
+        pinned ``(n, n)`` matrix is O(n²) per result.
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
 
-    D = _as_distance_matrix(data, method, metric)
+    D, points, used_metric = _interpret_input(data, method, metric, is_distance)
     n = int(D.shape[0])
 
     if backend == "auto":
@@ -147,7 +244,15 @@ def cluster(
         raise ValueError(f"unknown backend {backend!r}")
 
     merges = np.asarray(res.merges)[: int(res.n_merges)]
-    return ClusterResult(merges=merges, method=method, backend=backend, n_leaves=n)
+    return ClusterResult(
+        merges=merges,
+        method=method,
+        backend=backend,
+        n_leaves=n,
+        points=points if keep_inputs else None,
+        distances=D if keep_inputs else None,
+        metric=used_metric,
+    )
 
 
 @dataclass
@@ -190,18 +295,21 @@ def cluster_batch(
     method: str = "complete",
     *,
     metric: str | None = None,
+    is_distance: bool | None = None,
     backend: Backend = "auto",
     mesh=None,
     variant: str = "baseline",
     stop_at_k: int = 1,
     distance_threshold: float | None = None,
+    keep_inputs: bool = False,
 ) -> BatchResult:
     """Cluster MANY independent problems in one compiled program each bucket.
 
     ``problems`` is a sequence of independent inputs, each interpreted
     exactly as :func:`cluster` interprets its ``data`` argument: an
     ``(n, n)`` distance matrix when square and ``metric is None``, else
-    ``(n, d)`` points / ``(n, atoms, 3)`` conformations with a metric.
+    ``(n, d)`` points / ``(n, atoms, 3)`` conformations with a metric
+    (``is_distance`` forces one reading for every problem).
     Problem sizes may be ragged — the scheduler pads them into shape
     buckets (DESIGN.md §9) and runs one batched engine call per bucket.
 
@@ -217,6 +325,12 @@ def cluster_batch(
     distances equal to float tolerance (same contract as the
     single-problem kernel backend).  ``variant`` and the early-stop knobs
     apply per problem.
+
+    ``keep_inputs=True`` stores each problem's points/distance matrix on
+    its :class:`ClusterResult` (required for ``exemplars``/``centroids``
+    and the streaming-assignment export).  Off by default: a large batch
+    would otherwise pin O(Σ n_b²) matrix memory for the life of the
+    result list.
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
@@ -225,9 +339,10 @@ def cluster_batch(
     if backend not in ("serial", "distributed", "kernel"):
         raise ValueError(f"unknown backend {backend!r}")
 
-    matrices = [
-        np.asarray(_as_distance_matrix(data, method, metric)) for data in problems
+    interps = [
+        _interpret_input(data, method, metric, is_distance) for data in problems
     ]
+    matrices = [np.asarray(D) for D, _, _ in interps]
 
     merge_lists, stats = cluster_batch_merges(
         matrices,
@@ -244,7 +359,10 @@ def cluster_batch(
             method=method,
             backend=backend,
             n_leaves=mat.shape[0],
+            points=pts if keep_inputs else None,
+            distances=mat if keep_inputs else None,
+            metric=used_metric,
         )
-        for m, mat in zip(merge_lists, matrices)
+        for m, mat, (_, pts, used_metric) in zip(merge_lists, matrices, interps)
     ]
     return BatchResult(results=results, stats=stats)

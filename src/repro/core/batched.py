@@ -72,6 +72,56 @@ def bucket_batch(b: int, multiple_of: int = 1) -> int:
 
 
 @dataclass(frozen=True)
+class BucketSignature:
+    """Static compile signature of one bucket dispatch.
+
+    Everything that determines *which compiled executable* serves a
+    bucket — if two dispatches share a signature, XLA reuses one
+    program.  The scheduler derives one per touched bucket; the serving
+    layer's compile cache (:mod:`repro.service.cache`) uses it verbatim
+    as the cache/warmup key.
+    """
+
+    bucket_n: int          # padded problem size (from the BUCKETS grid)
+    bucket_B: int          # padded batch size (power of two × device multiple)
+    method: str
+    engine: str            # 'serial' | 'distributed' | 'kernel'
+    variant: str
+    n_steps: int           # static trip count = max(bucket_n - stop_at_k, 0)
+    with_threshold: bool   # structural: while_loop vs fori_loop
+
+
+def bucket_signature(
+    n: int,
+    batch: int,
+    *,
+    method: str,
+    engine: str = "serial",
+    variant: str = "baseline",
+    stop_at_k: int = 1,
+    with_threshold: bool = False,
+    b_multiple: int = 1,
+) -> BucketSignature:
+    """Signature of the bucket serving ``batch`` problems of ≤ ``n`` items.
+
+    ``n`` rounds up to the bucket grid and ``batch`` to a power of two
+    (times ``b_multiple``, the device count for the sharded engine) —
+    exactly the rounding :func:`cluster_batch_merges` performs, so a key
+    computed here matches the dispatch it predicts.
+    """
+    bn = bucket_n(n)
+    return BucketSignature(
+        bucket_n=bn,
+        bucket_B=bucket_batch(batch, b_multiple),
+        method=method,
+        engine=engine,
+        variant=variant,
+        n_steps=max(bn - stop_at_k, 0),
+        with_threshold=with_threshold,
+    )
+
+
+@dataclass(frozen=True)
 class BatchStats:
     """Scheduler accounting for one :func:`cluster_batch_merges` call."""
 
@@ -194,6 +244,33 @@ def _stack_bucket(mats: list[np.ndarray], n_pad: int, B_pad: int) -> np.ndarray:
     return out
 
 
+def pack_bucket(
+    mats: list[np.ndarray], sig: BucketSignature
+) -> tuple[np.ndarray, np.ndarray]:
+    """Stack one bucket's problems into the engine's operand layout.
+
+    Returns ``(Db, n_real)`` ready for the executable ``sig`` names:
+    ``(bucket_B, bucket_n, bucket_n)`` stacked matrices (padded slots
+    dead) and the ``(bucket_B,)`` int32 real-size vector.  Shared by the
+    offline scheduler below and the service batcher, so the two dispatch
+    paths cannot drift."""
+    Db = _stack_bucket(mats, sig.bucket_n, sig.bucket_B)
+    n_real = np.zeros((sig.bucket_B,), np.int32)
+    n_real[: len(mats)] = [m.shape[0] for m in mats]
+    return Db, n_real
+
+
+def merge_prefix(n: int, stop_at_k: int, n_merges: int) -> int:
+    """Rows of a padded slot's merge buffer that belong to the problem.
+
+    A problem of ``n`` items stopping at ``k`` clusters owns the first
+    ``max(n - stop_at_k, 0)`` trips; a threshold stop (or exhaustion
+    under while-loop semantics) can cut that further via the recorded
+    per-slot count.  The single source of the slicing rule for every
+    bucket consumer."""
+    return min(max(n - stop_at_k, 0), int(n_merges))
+
+
 def cluster_batch_merges(
     matrices: list[np.ndarray],
     method: str = "complete",
@@ -256,23 +333,30 @@ def cluster_batch_merges(
     for n_pad in sorted(groups):
         idxs = groups[n_pad]
         bucket_log.append((n_pad, len(idxs)))
-        B_pad = bucket_batch(len(idxs), b_multiple)
+        sig = bucket_signature(
+            n_pad,
+            len(idxs),
+            method=method,
+            engine=engine,
+            variant=variant,
+            stop_at_k=stop_at_k,
+            with_threshold=distance_threshold is not None,
+            b_multiple=b_multiple,
+        )
+        B_pad = sig.bucket_B
         padded_problems += B_pad - len(idxs)
         cells_padded += B_pad * n_pad * n_pad
 
-        Db = _stack_bucket([matrices[i] for i in idxs], n_pad, B_pad)
-        n_real = np.zeros((B_pad,), np.int32)
-        n_real[: len(idxs)] = [matrices[i].shape[0] for i in idxs]
+        Db, n_real = pack_bucket([matrices[i] for i in idxs], sig)
 
-        n_steps = max(n_pad - stop_at_k, 0)
         thr = jnp.float32(
             0.0 if distance_threshold is None else distance_threshold
         )
         kwargs = dict(
             method=method,
-            n_steps=n_steps,
+            n_steps=sig.n_steps,
             variant=variant,
-            with_threshold=distance_threshold is not None,
+            with_threshold=sig.with_threshold,
         )
         if engine == "serial":
             res = _run_vmap(Db, n_real, thr, **kwargs)
@@ -289,11 +373,7 @@ def cluster_batch_merges(
         merges = np.asarray(res.merges)
         n_merges = np.asarray(res.n_merges)
         for slot, idx in enumerate(idxs):
-            n = int(n_real[slot])
-            # a problem's real merges are the first max(0, n - stop_at_k)
-            # trips; a threshold stop (or exhaustion under while-loop
-            # semantics) can cut that further via the recorded count.
-            upto = min(max(n - stop_at_k, 0), int(n_merges[slot]))
+            upto = merge_prefix(int(n_real[slot]), stop_at_k, n_merges[slot])
             out[idx] = merges[slot, :upto]
 
     stats = BatchStats(

@@ -86,6 +86,34 @@ def cut(merges: np.ndarray, k: int, n: int | None = None) -> np.ndarray:
     return out
 
 
+def cut_exemplars(
+    merges: np.ndarray, k: int, D: np.ndarray, n: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Cut at ``k`` clusters and pick one *exemplar* (medoid) per cluster.
+
+    ``D`` is the ``(n, n)`` distance matrix the tree was built from.
+    Returns ``(labels, exemplars)`` where ``exemplars[c]`` is the leaf of
+    cluster ``c`` minimizing the summed distance to the cluster's other
+    members (ties go to the lowest leaf index).  The exemplars are the
+    per-cluster representatives the streaming-assignment service exports
+    (:mod:`repro.service.assign`): a new point is labeled by one
+    pairwise-distance call against ``k`` exemplars instead of a full
+    re-cluster.
+    """
+    D = np.asarray(D)
+    labels = cut(merges, k, n=n)
+    if D.shape != (labels.size, labels.size):
+        raise ValueError(
+            f"distance matrix {D.shape} does not match n={labels.size} leaves"
+        )
+    exemplars = np.empty(k, np.int64)
+    for c in range(k):
+        members = np.flatnonzero(labels == c)
+        sub = D[np.ix_(members, members)]
+        exemplars[c] = members[int(np.argmin(sub.sum(axis=1)))]
+    return labels, exemplars
+
+
 def merge_heights(merges: np.ndarray) -> np.ndarray:
     return np.asarray(merges)[:, 2]
 

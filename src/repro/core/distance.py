@@ -72,6 +72,19 @@ def kabsch_rmsd(A: jax.Array, B: jax.Array) -> jax.Array:
 
 
 @jax.jit
+def pairwise_rmsd_cross(A: jax.Array, B: jax.Array) -> jax.Array:
+    """``(n, atoms, 3) × (m, atoms, 3) → (n, m)`` cross RMSD.
+
+    The rectangular counterpart of :func:`pairwise_rmsd` — used by the
+    streaming-assignment path to score new conformations against the
+    ``k`` cluster exemplars without re-clustering.
+    """
+    A = jnp.asarray(A, jnp.float32)
+    B = jnp.asarray(B, jnp.float32)
+    return jax.vmap(lambda a: jax.vmap(lambda b: kabsch_rmsd(a, b))(B))(A)
+
+
+@jax.jit
 def pairwise_rmsd(confs: jax.Array) -> jax.Array:
     """``(n, atoms, 3)`` conformations → ``(n, n)`` optimal-superposition RMSD.
 

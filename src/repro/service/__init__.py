@@ -1,0 +1,41 @@
+"""repro.service — online clustering service over the batched LW engine.
+
+The serving layer DESIGN.md §10 describes: a micro-batching front-end
+(:mod:`~repro.service.batcher`) that packs continuously arriving
+requests into the scheduler's shape buckets, an explicit AOT compile
+cache with LRU eviction and declarative warmup
+(:mod:`~repro.service.cache`) so steady-state traffic never compiles,
+and a streaming-assignment path (:mod:`~repro.service.assign`) that
+labels new points against a fitted dendrogram cut with one
+pairwise-distance call instead of a re-cluster.  A synthetic open-loop
+load driver lives in :mod:`~repro.service.server`
+(``python -m repro.service.server``).
+"""
+
+from repro.service.assign import AssignIndex, assign, build_index
+from repro.service.batcher import (
+    ClusteringService,
+    MetricsSnapshot,
+    ServiceConfig,
+    ServiceMetrics,
+)
+from repro.service.cache import (
+    CacheStats,
+    CompileCache,
+    engine_jit_cache_size,
+    warmup_signatures,
+)
+
+__all__ = [
+    "AssignIndex",
+    "CacheStats",
+    "ClusteringService",
+    "CompileCache",
+    "MetricsSnapshot",
+    "ServiceConfig",
+    "ServiceMetrics",
+    "assign",
+    "build_index",
+    "engine_jit_cache_size",
+    "warmup_signatures",
+]

@@ -1,0 +1,131 @@
+"""Streaming assignment: label new points without re-clustering.
+
+The "millions of users, few re-fits" scenario (motivated by *Efficient
+Clustering with Limited Distance Information*): most serving traffic
+does not change the cluster structure, it just needs to know *where an
+item lands* in an existing structure.  A finished
+:class:`~repro.core.api.ClusterResult` plus a cut level ``k`` exports
+one representative per cluster — the medoid **exemplar**
+(:meth:`ClusterResult.exemplars`, via
+:func:`repro.core.dendrogram.cut_exemplars`) or the point-mean
+**centroid** (:meth:`ClusterResult.centroids`) — and a new point is then
+labeled by ONE pairwise-distance call against those ``k``
+representatives, reusing the :mod:`repro.core.distance` builders (or
+the Pallas ``pairwise`` kernel for the Euclidean metrics).
+
+In the exact-nearest-exemplar regime (cluster diameter ≪ inter-cluster
+separation) the streamed label equals what a full re-cluster of
+base + new points cut at ``k`` would assign — asserted in
+``tests/test_service.py``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.api import ClusterResult
+from repro.core.distance import (
+    pairwise_cosine,
+    pairwise_rmsd_cross,
+    pairwise_sq_euclidean,
+)
+from repro.core.linkage import default_metric
+
+#: Metrics the assignment path can score against representatives.
+ASSIGN_METRICS: tuple[str, ...] = ("euclidean", "sqeuclidean", "cosine", "rmsd")
+
+
+@dataclass(frozen=True)
+class AssignIndex:
+    """The per-cluster representatives of one dendrogram cut.
+
+    ``reps[c]`` is the coordinate of cluster ``c``'s representative in
+    the *original input space* (``(k, d)`` points, or ``(k, atoms, 3)``
+    conformations for ``rmsd``); the assigned label of a query IS the
+    row index of its nearest representative, because exemplars/centroids
+    are exported in cut-label order.
+    """
+
+    reps: np.ndarray
+    metric: str
+    kind: str                   # 'exemplar' | 'centroid'
+
+    @property
+    def k(self) -> int:
+        return self.reps.shape[0]
+
+
+def build_index(
+    result: ClusterResult,
+    k: int,
+    *,
+    kind: str = "exemplar",
+    metric: str | None = None,
+) -> AssignIndex:
+    """Export the ``k``-cut of a fitted result as an assignment index.
+
+    ``result`` must have been fit from *points* (the service and
+    ``cluster(points, ...)`` both keep them on the result) — raw
+    distance-matrix input has no coordinates to compare new points
+    against.  ``kind='exemplar'`` uses the per-cluster medoid (valid for
+    any metric, including ``rmsd``); ``kind='centroid'`` uses the
+    per-cluster mean (Euclidean metrics on ``(n, d)`` points only).
+    """
+    if result.points is None:
+        raise ValueError(
+            "build_index needs a ClusterResult fit from points "
+            "(cluster(points, ...) or service.submit(points)); a raw "
+            "distance matrix has no coordinates to assign against"
+        )
+    metric = metric or result.metric or default_metric(result.method)
+    if metric not in ASSIGN_METRICS:
+        raise ValueError(f"metric {metric!r} not in {ASSIGN_METRICS}")
+    X = np.asarray(result.points)
+    if kind == "exemplar":
+        reps = X[result.exemplars(k)]
+    elif kind == "centroid":
+        reps = result.centroids(k)
+    else:
+        raise ValueError(f"kind must be 'exemplar' or 'centroid', got {kind!r}")
+    return AssignIndex(
+        reps=np.asarray(reps, np.float32), metric=metric, kind=kind
+    )
+
+
+def assign(index: AssignIndex, X, *, backend: str = "auto") -> np.ndarray:
+    """Label each row of ``X`` with its nearest representative's cluster.
+
+    One pairwise-distance call against ``index.k`` representatives — no
+    engine, no merge loop, no re-cluster.  ``backend='kernel'`` routes
+    the Euclidean metrics through the tiled Pallas ``pairwise`` kernel
+    (:func:`repro.kernels.ops.pairwise`); ``'auto'``/``'xla'`` use the
+    Gram-trick builders.  A single query (``reps.ndim - 1`` dimensional)
+    is accepted and labeled as a batch of one.
+    """
+    if backend not in ("auto", "xla", "kernel"):
+        raise ValueError(
+            f"backend must be 'auto', 'xla' or 'kernel', got {backend!r}"
+        )
+    X = np.asarray(X, np.float32)
+    if X.ndim == index.reps.ndim - 1:
+        X = X[None]
+    if X.shape[1:] != index.reps.shape[1:]:
+        raise ValueError(
+            f"query shape {X.shape} does not match representatives "
+            f"{index.reps.shape}"
+        )
+    if index.metric in ("euclidean", "sqeuclidean"):
+        # nearest neighbor is invariant to the sqrt — always use squared
+        if backend == "kernel":
+            from repro.kernels.ops import pairwise
+
+            D = pairwise(X, index.reps)
+        else:
+            D = pairwise_sq_euclidean(X, index.reps)
+    elif index.metric == "cosine":
+        D = pairwise_cosine(X, index.reps)
+    else:                               # rmsd
+        D = pairwise_rmsd_cross(X, index.reps)
+    return np.argmin(np.asarray(D), axis=1)

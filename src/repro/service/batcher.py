@@ -1,0 +1,445 @@
+"""Micro-batching front-end over the batched LW engine (DESIGN.md §10).
+
+Production traffic is not one offline ``cluster_batch`` call — it is
+many small independent requests arriving *continuously* (one dendrogram
+per user session, document shard, protein family).  Dispatching each
+request alone forfeits the batched engine's throughput; waiting for a
+full batch forfeits latency.  The batcher implements the standard
+continuous-batching compromise:
+
+* the first request into an empty queue opens a **batching window** of
+  ``max_delay_ms``;
+* the window closes early once ``max_batch`` requests have arrived;
+* whatever arrived is grouped into the scheduler's shape buckets
+  (:func:`repro.core.batched.bucket_n`) and each bucket is dispatched as
+  ONE engine call — an AOT executable fetched from the
+  :class:`~repro.service.cache.CompileCache` by its
+  :class:`~repro.core.batched.BucketSignature`, so warmed steady-state
+  traffic performs **zero compiles**.
+
+Every ``submit`` returns a ``concurrent.futures.Future`` resolving to
+the same :class:`~repro.core.api.ClusterResult` the single-problem
+``cluster(data, method, backend='serial', ...)`` call would produce —
+exactly the ``cluster_batch`` per-problem contract, since each bucket
+IS one batched-engine dispatch (index-identical merges; distances
+bit-identical for the reducible linkages, and within float ulps for
+the geometric methods, whose fused recurrences may round differently
+across padded shapes).  The result carries the request's
+points/distance matrix, so the streaming assignment path
+(:mod:`repro.service.assign`) can export exemplars without re-touching
+the service.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, InvalidStateError
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.api import ClusterResult, _interpret_input
+from repro.core.batched import (
+    BUCKETS,
+    bucket_batch,
+    bucket_n,
+    bucket_signature,
+    merge_prefix,
+    pack_bucket,
+)
+from repro.core.engine import VARIANTS
+from repro.core.linkage import METHODS
+from repro.service.cache import CACHEABLE_ENGINES, CompileCache, warmup_signatures
+
+
+@dataclass(frozen=True)
+class ServiceConfig:
+    """One service = one engine configuration.
+
+    ``bucket_ns`` declares the steady-state traffic mix (which shape
+    buckets :meth:`ClusteringService.warmup` precompiles).  Requests
+    outside the declared buckets are still served — they just pay an
+    on-demand compile (a recorded cache miss), exactly the signal the
+    cache-hit-rate metric exists to surface.
+    """
+
+    method: str = "complete"
+    engine: str = "serial"             # 'serial' | 'kernel'
+    variant: str = "baseline"
+    stop_at_k: int = 1
+    distance_threshold: float | None = None
+    max_batch: int = 8                 # close the window at this many requests
+    max_delay_ms: float = 2.0          # batching window opened by first request
+    bucket_ns: tuple[int, ...] = (8, 16, 32, 64)
+    cache_capacity: int = 64
+
+    def __post_init__(self) -> None:
+        if self.method not in METHODS:
+            raise ValueError(f"unknown linkage method {self.method!r}")
+        if self.engine not in CACHEABLE_ENGINES:
+            raise ValueError(
+                f"service engine must be one of {CACHEABLE_ENGINES}, got "
+                f"{self.engine!r}"
+            )
+        if self.variant not in VARIANTS:
+            raise ValueError(f"unknown variant {self.variant!r}")
+        if self.stop_at_k < 1:
+            raise ValueError(f"stop_at_k must be >= 1, got {self.stop_at_k}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_delay_ms < 0:
+            raise ValueError(f"max_delay_ms must be >= 0, got {self.max_delay_ms}")
+        for n in self.bucket_ns:
+            if n not in BUCKETS:
+                raise ValueError(
+                    f"declared bucket {n} is not on the bucket grid {BUCKETS}"
+                )
+        working_set = len(self.bucket_ns) * bucket_batch(self.max_batch).bit_length()
+        if self.cache_capacity < working_set:
+            raise ValueError(
+                f"cache_capacity={self.cache_capacity} is smaller than the "
+                f"declared warmup working set ({working_set} signatures: "
+                f"{len(self.bucket_ns)} buckets x padded batch sizes) — the "
+                "LRU would thrash and steady-state traffic would recompile, "
+                "silently breaking the zero-recompile contract"
+            )
+
+
+@dataclass(frozen=True)
+class MetricsSnapshot:
+    """Point-in-time service metrics (see ``ServiceMetrics.snapshot``)."""
+
+    n_requests: int
+    n_batches: int
+    n_failed: int
+    p50_ms: float
+    p99_ms: float
+    mean_batch_size: float
+    pad_waste: float            # fraction of dispatched matrix cells that pad
+    cache_hit_rate: float | None
+
+
+class ServiceMetrics:
+    """Thread-safe accumulators the dispatcher feeds per batch.
+
+    Latencies live in a bounded ring (the last ``window`` requests) so a
+    long-lived service neither grows without bound nor pays an
+    ever-larger percentile sort per snapshot; the scalar counters are
+    whole-lifetime."""
+
+    def __init__(self, window: int = 8192) -> None:
+        self._lock = threading.Lock()
+        self._latencies_ms: deque[float] = deque(maxlen=window)
+        self.n_requests = 0
+        self.n_batches = 0
+        self.n_failed = 0
+        self.cells_real = 0
+        self.cells_padded = 0
+
+    def observe_request(self, latency_ms: float) -> None:
+        with self._lock:
+            self.n_requests += 1
+            self._latencies_ms.append(latency_ms)
+
+    def observe_failure(self) -> None:
+        with self._lock:
+            self.n_failed += 1
+
+    def observe_bucket(self, cells_real: int, cells_padded: int) -> None:
+        with self._lock:
+            self.n_batches += 1
+            self.cells_real += cells_real
+            self.cells_padded += cells_padded
+
+    def snapshot(self, cache: CompileCache | None = None) -> MetricsSnapshot:
+        with self._lock:
+            lat = np.asarray(self._latencies_ms, np.float64)
+            pad = (
+                1.0 - self.cells_real / self.cells_padded
+                if self.cells_padded
+                else 0.0
+            )
+            return MetricsSnapshot(
+                n_requests=self.n_requests,
+                n_batches=self.n_batches,
+                n_failed=self.n_failed,
+                p50_ms=float(np.percentile(lat, 50)) if lat.size else 0.0,
+                p99_ms=float(np.percentile(lat, 99)) if lat.size else 0.0,
+                mean_batch_size=(
+                    self.n_requests / self.n_batches if self.n_batches else 0.0
+                ),
+                pad_waste=pad,
+                cache_hit_rate=cache.stats.hit_rate if cache is not None else None,
+            )
+
+
+@dataclass
+class _Job:
+    matrix: np.ndarray
+    points: np.ndarray | None
+    metric: str | None
+    future: Future = field(repr=False)
+    t_submit: float = 0.0
+    done: bool = False          # guarded by the service condition lock
+
+
+class ClusteringService:
+    """The continuous-batching clustering server.
+
+    One background dispatcher thread owns all engine dispatch (jax calls
+    never race); callers interact only through :meth:`submit` futures.
+    Use as a context manager, or call :meth:`close`.
+    """
+
+    def __init__(
+        self,
+        config: ServiceConfig | None = None,
+        *,
+        cache: CompileCache | None = None,
+    ) -> None:
+        self.config = config or ServiceConfig()
+        self.cache = cache or CompileCache(self.config.cache_capacity)
+        self.metrics = ServiceMetrics()
+        self._queue: queue.Queue[_Job] = queue.Queue()
+        self._pending = 0
+        self._cond = threading.Condition()
+        self._closing = threading.Event()
+        self._thread = threading.Thread(
+            target=self._loop, name="lw-service-batcher", daemon=True
+        )
+        self._thread.start()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def __enter__(self) -> "ClusteringService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def warmup(self) -> int:
+        """Precompile the declared working set; returns compiles performed.
+
+        Covers every ``(bucket_n, padded-B)`` signature traffic inside
+        ``config.bucket_ns`` can touch under the ``max_batch`` policy —
+        after this returns, such traffic runs with zero compiles.
+        """
+        cfg = self.config
+        return self.cache.warmup(
+            warmup_signatures(
+                cfg.bucket_ns,
+                method=cfg.method,
+                engine=cfg.engine,
+                variant=cfg.variant,
+                stop_at_k=cfg.stop_at_k,
+                with_threshold=cfg.distance_threshold is not None,
+                max_batch=cfg.max_batch,
+            )
+        )
+
+    def flush(self, timeout: float | None = None) -> bool:
+        """Block until every submitted request has resolved."""
+        with self._cond:
+            return self._cond.wait_for(lambda: self._pending == 0, timeout)
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        """Stop the service: the in-flight batch completes, still-queued
+        requests fail fast with "service is closed" (call :meth:`flush`
+        first if you want queued work served), the thread stops.
+
+        Raises if the dispatcher is still mid-dispatch after ``timeout``
+        (e.g. stuck in a long on-demand compile) — silently returning
+        would strand that batch's futures unresolved forever once the
+        daemon thread dies with the interpreter.
+        """
+        self._closing.set()
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise RuntimeError(
+                f"service dispatcher did not stop within {timeout}s; "
+                "in-flight work is still running — its futures are not "
+                "resolved yet (retry close() with a larger timeout)"
+            )
+        self._drain_closed()
+
+    # -- request path -------------------------------------------------------
+
+    def submit(
+        self,
+        data,
+        *,
+        metric: str | None = None,
+        is_distance: bool | None = None,
+    ) -> Future:
+        """Enqueue one clustering request; returns a Future[ClusterResult].
+
+        ``data``/``metric``/``is_distance`` are interpreted exactly as by
+        :func:`repro.core.cluster` (points are embedded on the *caller's*
+        thread, keeping the dispatcher free for engine calls).  Invalid
+        requests resolve the future with the error instead of raising,
+        so one bad request cannot take down a submission loop.
+        """
+        fut: Future = Future()
+        if self._closing.is_set():
+            fut.set_exception(RuntimeError("service is closed"))
+            return fut
+        try:
+            D, points, used_metric = _interpret_input(
+                data, self.config.method, metric, is_distance
+            )
+            mat = np.asarray(D, np.float32)
+            if mat.shape[0] < 2:
+                raise ValueError(
+                    f"need at least 2 items to cluster, got {mat.shape[0]}"
+                )
+            bucket_n(mat.shape[0])      # raises if larger than the top bucket
+        except Exception as exc:  # noqa: BLE001 — resolve, don't raise
+            self.metrics.observe_failure()
+            fut.set_exception(exc)
+            return fut
+        with self._cond:
+            self._pending += 1
+        self._queue.put(_Job(mat, points, used_metric, fut, time.perf_counter()))
+        if self._closing.is_set():
+            # close() may have drained the queue between our closing check
+            # and the put — make sure this job cannot be stranded
+            self._drain_closed()
+        return fut
+
+    def submit_many(self, datas: Sequence, **kw) -> list[Future]:
+        return [self.submit(d, **kw) for d in datas]
+
+    def _drain_closed(self) -> None:
+        """Fail whatever is left in the queue of a closed service."""
+        while True:
+            try:
+                job = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            self._finish(job, error=RuntimeError("service is closed"))
+
+    # -- dispatcher ---------------------------------------------------------
+
+    def _loop(self) -> None:
+        cfg = self.config
+        while True:
+            try:
+                first = self._queue.get(timeout=0.02)
+            except queue.Empty:
+                if self._closing.is_set():
+                    return
+                continue
+            if self._closing.is_set():
+                # fast shutdown: fail still-queued work instead of serving
+                # it (close() would otherwise block on an unbounded backlog
+                # — callers that want completion flush() before close())
+                self._finish(first, error=RuntimeError("service is closed"))
+                continue
+            batch = [first]
+            deadline = time.perf_counter() + cfg.max_delay_ms / 1e3
+            while len(batch) < cfg.max_batch:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                try:
+                    batch.append(self._queue.get(timeout=remaining))
+                except queue.Empty:
+                    break
+            try:
+                self._dispatch(batch)
+            except Exception as exc:  # noqa: BLE001 — the thread must survive
+                for job in batch:   # _finish is idempotent per job
+                    self._finish(job, error=exc)
+
+    def _dispatch(self, jobs: list[_Job]) -> None:
+        groups: dict[int, list[_Job]] = {}
+        for job in jobs:
+            groups.setdefault(bucket_n(job.matrix.shape[0]), []).append(job)
+        for n_pad in sorted(groups):
+            group = groups[n_pad]
+            try:
+                self._run_bucket(n_pad, group)
+            except Exception as exc:  # noqa: BLE001 — fail the bucket's futures
+                for job in group:
+                    self._finish(job, error=exc)
+
+    def _run_bucket(self, n_pad: int, group: list[_Job]) -> None:
+        cfg = self.config
+        sig = bucket_signature(
+            n_pad,
+            len(group),
+            method=cfg.method,
+            engine=cfg.engine,
+            variant=cfg.variant,
+            stop_at_k=cfg.stop_at_k,
+            with_threshold=cfg.distance_threshold is not None,
+        )
+        fn = self.cache.get(sig)
+
+        # same pack/slice helpers as the offline scheduler — one rule set
+        Db, n_real = pack_bucket([j.matrix for j in group], sig)
+        thr = jnp.float32(
+            0.0 if cfg.distance_threshold is None else cfg.distance_threshold
+        )
+        res = fn(jnp.asarray(Db), jnp.asarray(n_real), thr)
+        merges = np.asarray(res.merges)
+        n_merges = np.asarray(res.n_merges)
+        t_done = time.perf_counter()
+
+        self.metrics.observe_bucket(
+            cells_real=int(sum(int(n) ** 2 for n in n_real)),
+            cells_padded=sig.bucket_B * n_pad * n_pad,
+        )
+        for slot, job in enumerate(group):
+            n = job.matrix.shape[0]
+            upto = merge_prefix(n, cfg.stop_at_k, n_merges[slot])
+            result = ClusterResult(
+                merges=merges[slot, :upto],
+                method=cfg.method,
+                backend=cfg.engine,
+                n_leaves=n,
+                points=job.points,
+                distances=job.matrix,
+                metric=job.metric,
+            )
+            self._finish(job, result=result, t_done=t_done)
+
+    def _finish(
+        self,
+        job: _Job,
+        *,
+        result: ClusterResult | None = None,
+        error: Exception | None = None,
+        t_done: float | None = None,
+    ) -> None:
+        """Resolve one job exactly once — idempotent and cancel-safe.
+
+        A client may have cancelled the future (or the error path may
+        revisit a job its bucket already resolved); neither is allowed
+        to raise into the dispatcher thread or double-count
+        ``_pending``.
+        """
+        with self._cond:
+            if job.done:
+                return
+            job.done = True
+        try:
+            if error is not None:
+                self.metrics.observe_failure()
+                job.future.set_exception(error)
+            else:
+                self.metrics.observe_request(
+                    ((t_done or time.perf_counter()) - job.t_submit) * 1e3
+                )
+                job.future.set_result(result)
+        except InvalidStateError:       # future was cancelled by the client
+            pass
+        finally:
+            with self._cond:
+                self._pending -= 1
+                self._cond.notify_all()

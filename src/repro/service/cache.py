@@ -1,0 +1,215 @@
+"""Compile cache + warmup for the clustering service (DESIGN.md §10).
+
+``jax.jit``'s implicit cache is the wrong tool for a long-lived serving
+process: it is keyed invisibly, never evicts, and gives no way to ask
+"will this request compile?".  This module replaces it on the serving
+path with an *explicit* cache of AOT-compiled executables
+(``jitted.lower(shapes).compile()``) keyed by the scheduler's
+:class:`~repro.core.batched.BucketSignature`:
+
+* **observable** — hits / misses / compiles / evictions are counted, so
+  the zero-recompile steady-state property is an *assertion*, not a
+  hope (``tests/test_service.py``).
+* **bounded** — LRU eviction at ``capacity`` entries; a traffic shift
+  to new shapes retires old executables instead of leaking them.
+* **warmable** — :func:`warmup_signatures` enumerates every signature a
+  declared traffic mix can touch (bucket grid × padded batch sizes), so
+  a service warms up before taking traffic and then never compiles.
+
+Steady-state dispatch goes exclusively through these AOT executables;
+:func:`engine_jit_cache_size` reads the *implicit* jit caches of the
+batched-engine entry points so tests can additionally assert nothing
+leaked through the implicit path.
+
+Only the ``serial`` (vmap) and ``kernel`` (Pallas-under-vmap) engines
+are cacheable here: the ``distributed`` engine's executable closes over
+the live mesh, which is process-global state the cache key cannot
+capture portably — route mesh traffic through ``cluster_batch``.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.batched import BUCKETS, BucketSignature, bucket_batch, bucket_signature
+
+#: Static Pallas block size used for every cached ``kernel``-engine
+#: executable (the :mod:`repro.kernels.ops` default).
+KERNEL_BLOCK_M = 256
+
+#: Engines the AOT cache can compile.
+CACHEABLE_ENGINES: tuple[str, ...] = ("serial", "kernel")
+
+
+@dataclass
+class CacheStats:
+    """Counters of one :class:`CompileCache` (monotonic)."""
+
+    hits: int = 0
+    misses: int = 0
+    compiles: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+def _compile(sig: BucketSignature) -> Callable:
+    """AOT-lower and compile the engine entry point for one signature.
+
+    Abstract shapes only (``ShapeDtypeStruct``) — warming a bucket does
+    not allocate or run a dummy batch.  The returned executable takes
+    ``(Db, n_real, threshold)`` concrete arrays and returns the engine's
+    ``LWResult``.
+    """
+    Db = jax.ShapeDtypeStruct((sig.bucket_B, sig.bucket_n, sig.bucket_n), jnp.float32)
+    nr = jax.ShapeDtypeStruct((sig.bucket_B,), jnp.int32)
+    thr = jax.ShapeDtypeStruct((), jnp.float32)
+    statics = dict(
+        method=sig.method,
+        n_steps=sig.n_steps,
+        variant=sig.variant,
+        with_threshold=sig.with_threshold,
+    )
+    if sig.engine == "serial":
+        from repro.core.batched import _run_vmap as fn
+    elif sig.engine == "kernel":
+        from repro.kernels.ops import _kernelized_batch_run as fn
+
+        statics["block_m"] = KERNEL_BLOCK_M
+    else:
+        raise ValueError(
+            f"the service compile cache supports engines {CACHEABLE_ENGINES}, "
+            f"not {sig.engine!r} (the distributed engine's executable depends "
+            "on the live mesh — use cluster_batch for mesh traffic)"
+        )
+    return fn.lower(Db, nr, thr, **statics).compile()
+
+
+class CompileCache:
+    """LRU cache of AOT-compiled batched-engine executables.
+
+    Thread-safe: the batcher's dispatcher thread and a foreground warmup
+    may race on :meth:`get`.  Compilation happens outside the lock (it
+    can take seconds); a lost race compiles twice and keeps one.
+    """
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.stats = CacheStats()
+        self._entries: OrderedDict[BucketSignature, Callable] = OrderedDict()
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, sig: BucketSignature) -> bool:
+        return sig in self._entries
+
+    def signatures(self) -> list[BucketSignature]:
+        """Currently cached signatures, least-recently-used first."""
+        with self._lock:
+            return list(self._entries)
+
+    def get(self, sig: BucketSignature) -> Callable:
+        """The compiled executable for ``sig`` — compiling on miss."""
+        with self._lock:
+            fn = self._entries.get(sig)
+            if fn is not None:
+                self._entries.move_to_end(sig)
+                self.stats.hits += 1
+                return fn
+            self.stats.misses += 1
+        fn = _compile(sig)
+        with self._lock:
+            if sig not in self._entries:
+                self.stats.compiles += 1
+                self._entries[sig] = fn
+                while len(self._entries) > self.capacity:
+                    self._entries.popitem(last=False)
+                    self.stats.evictions += 1
+            self._entries.move_to_end(sig)
+            return self._entries[sig]
+
+    def warmup(self, sigs: Iterable[BucketSignature]) -> int:
+        """Compile every signature up front; returns compiles performed."""
+        before = self.stats.compiles
+        for sig in sigs:
+            self.get(sig)
+        return self.stats.compiles - before
+
+
+def warmup_signatures(
+    bucket_ns: Sequence[int],
+    *,
+    method: str,
+    engine: str = "serial",
+    variant: str = "baseline",
+    stop_at_k: int = 1,
+    with_threshold: bool = False,
+    max_batch: int = 1,
+) -> list[BucketSignature]:
+    """The declarative warmup list for a traffic mix.
+
+    Enumerates every signature the batcher can dispatch for problems
+    that fall into ``bucket_ns`` under a ``max_batch`` batching policy:
+    the padded batch axis only takes power-of-two values up to
+    ``bucket_batch(max_batch)``, so the working set is
+    ``len(bucket_ns) × (log2(max_batch) + 1)`` executables — warm them
+    all and steady-state traffic performs zero compiles.
+    """
+    for n in bucket_ns:
+        if n not in BUCKETS:
+            raise ValueError(
+                f"declared bucket {n} is not on the bucket grid {BUCKETS}"
+            )
+    sigs = []
+    B_max = bucket_batch(max_batch)
+    for n in bucket_ns:
+        B = 1
+        while B <= B_max:
+            sigs.append(
+                bucket_signature(
+                    n,
+                    B,
+                    method=method,
+                    engine=engine,
+                    variant=variant,
+                    stop_at_k=stop_at_k,
+                    with_threshold=with_threshold,
+                )
+            )
+            B *= 2
+    return sigs
+
+
+def engine_jit_cache_size() -> int:
+    """Total entries in the *implicit* jit caches of the engine entry points.
+
+    Steady-state service traffic must run exclusively through the AOT
+    executables above, so this number must not grow while the service
+    serves warmed traffic — the compile-counter test snapshots it before
+    and after the steady-state run (catching any accidental dispatch
+    through ``jax.jit``'s implicit path, which ``CompileCache.stats``
+    alone could not see).
+    """
+    from repro.core import batched
+    from repro.kernels import ops
+
+    fns = (
+        batched._run_vmap,
+        batched._run_sharded,
+        ops._kernelized_run,
+        ops._kernelized_batch_run,
+    )
+    return int(sum(f._cache_size() for f in fns))

@@ -1,0 +1,202 @@
+"""Synthetic open-loop load driver + metrics report for the service.
+
+Drives a :class:`~repro.service.batcher.ClusteringService` with an
+open-loop Poisson arrival process (arrivals are scheduled independently
+of completions — the honest way to measure a server: a closed loop
+self-throttles and hides queueing collapse), then reports the serving
+metrics the ROADMAP cares about: p50/p99 latency, throughput, padding
+waste, cache hit rate, and — the §10 invariant — compiles performed
+after warmup.
+
+    PYTHONPATH=src python -m repro.service.server --rate 200 --duration 3
+
+Problem matrices are pre-generated with numpy (no jax on the submit
+path) so the generator measures the service, not itself.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.service.batcher import ClusteringService, MetricsSnapshot, ServiceConfig
+from repro.service.cache import engine_jit_cache_size
+
+
+def synthetic_problem(rng: np.random.Generator, n: int, dim: int = 8) -> np.ndarray:
+    """One (n, n) Euclidean distance matrix over random points (numpy only)."""
+    X = rng.normal(size=(n, dim))
+    D = np.sqrt(np.maximum(((X[:, None] - X[None]) ** 2).sum(-1), 0.0))
+    return D.astype(np.float32)
+
+
+@dataclass(frozen=True)
+class LoadReport:
+    """One load run: the service snapshot plus driver-side accounting."""
+
+    snapshot: MetricsSnapshot
+    elapsed_s: float
+    n_submitted: int
+    n_errors: int
+    n_unresolved: int           # requests still pending at drain timeout
+    warmup_compiles: int
+    steady_compiles: int        # AOT compiles during the timed run (want: 0)
+    steady_jit_growth: int      # implicit jit-cache growth during it (want: 0)
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.n_submitted / self.elapsed_s if self.elapsed_s else 0.0
+
+
+def run_load(
+    service: ClusteringService,
+    *,
+    rate_hz: float,
+    duration_s: float,
+    sizes: tuple[int, ...],
+    seed: int = 0,
+    dim: int = 8,
+    pool: int = 64,
+) -> tuple[list[Future], float, bool]:
+    """Open-loop Poisson arrivals of ragged problems.
+
+    Returns ``(futures, elapsed_s, drained)`` — ``drained=False`` means
+    the backlog did not clear within the drain timeout (the service is
+    past saturation; some futures are still pending).  ``sizes`` are the
+    real problem sizes to draw from (they need not be bucket-aligned —
+    the batcher rounds them up); a ``pool`` of matrices is generated up
+    front so the arrival loop does no problem-building work of its own.
+    """
+    rng = np.random.default_rng(seed)
+    problems = [
+        synthetic_problem(rng, int(rng.choice(sizes)), dim) for _ in range(pool)
+    ]
+    futures: list[Future] = []
+    t0 = time.perf_counter()
+    deadline = t0 + duration_s
+    t_next = t0
+    while True:
+        now = time.perf_counter()
+        if now >= deadline:
+            break
+        if now < t_next:
+            time.sleep(min(t_next - now, 0.002))
+            continue
+        # is_distance=True skips the O(n²) square-input ambiguity check —
+        # the cheap disambiguation the service path exists to use
+        futures.append(
+            service.submit(problems[len(futures) % pool], is_distance=True)
+        )
+        t_next += rng.exponential(1.0 / rate_hz)
+    drained = service.flush(timeout=120.0)
+    return futures, time.perf_counter() - t0, drained
+
+
+def drive(
+    config: ServiceConfig,
+    *,
+    rate_hz: float,
+    duration_s: float,
+    sizes: tuple[int, ...],
+    seed: int = 0,
+    warmup: bool = True,
+) -> LoadReport:
+    """Warm a fresh service, run one timed open-loop load, close it."""
+    with ClusteringService(config) as service:
+        warmup_compiles = service.warmup() if warmup else 0
+        compiles_before = service.cache.stats.compiles
+        jit_before = engine_jit_cache_size()
+        futures, elapsed, _ = run_load(
+            service,
+            rate_hz=rate_hz,
+            duration_s=duration_s,
+            sizes=sizes,
+            seed=seed,
+        )
+        # only inspect resolved futures — under saturation some are still
+        # pending and a bare f.exception() would block the driver forever
+        n_errors = sum(
+            1 for f in futures if f.done() and f.exception() is not None
+        )
+        n_unresolved = sum(1 for f in futures if not f.done())
+        return LoadReport(
+            snapshot=service.metrics.snapshot(service.cache),
+            elapsed_s=elapsed,
+            n_submitted=len(futures),
+            n_errors=n_errors,
+            n_unresolved=n_unresolved,
+            warmup_compiles=warmup_compiles,
+            steady_compiles=service.cache.stats.compiles - compiles_before,
+            steady_jit_growth=engine_jit_cache_size() - jit_before,
+        )
+
+
+def print_report(report: LoadReport) -> None:
+    s = report.snapshot
+    print(
+        f"requests={report.n_submitted} errors={report.n_errors} "
+        f"unresolved={report.n_unresolved} "
+        f"batches={s.n_batches} elapsed={report.elapsed_s:.2f}s"
+    )
+    if report.n_unresolved:
+        print(
+            f"WARNING: {report.n_unresolved} requests had not resolved when "
+            "the drain timed out — the offered rate exceeds service capacity"
+        )
+    print(
+        f"throughput={report.throughput_rps:.1f} req/s  "
+        f"p50={s.p50_ms:.2f} ms  p99={s.p99_ms:.2f} ms  "
+        f"mean_batch={s.mean_batch_size:.2f}"
+    )
+    print(
+        f"pad_waste={s.pad_waste:.1%}  cache_hit_rate={s.cache_hit_rate:.1%}  "
+        f"warmup_compiles={report.warmup_compiles}  "
+        f"steady_compiles={report.steady_compiles}  "
+        f"steady_jit_growth={report.steady_jit_growth}"
+    )
+
+
+def main(argv: list[str] | None = None) -> LoadReport:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rate", type=float, default=200.0, help="arrivals/sec")
+    ap.add_argument("--duration", type=float, default=3.0, help="seconds")
+    ap.add_argument("--method", default="complete")
+    ap.add_argument("--engine", default="serial", choices=("serial", "kernel"))
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--buckets", default="8,16,32",
+                    help="declared bucket sizes, comma-separated")
+    ap.add_argument("--sizes", default="5,8,12,20,27",
+                    help="real problem sizes to draw, comma-separated")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-warmup", action="store_true",
+                    help="skip warmup (shows the cold-start compile cost)")
+    args = ap.parse_args(argv)
+
+    config = ServiceConfig(
+        method=args.method,
+        engine=args.engine,
+        variant=args.variant,
+        max_batch=args.max_batch,
+        max_delay_ms=args.max_delay_ms,
+        bucket_ns=tuple(int(b) for b in args.buckets.split(",")),
+    )
+    report = drive(
+        config,
+        rate_hz=args.rate,
+        duration_s=args.duration,
+        sizes=tuple(int(s) for s in args.sizes.split(",")),
+        seed=args.seed,
+        warmup=not args.no_warmup,
+    )
+    print_report(report)
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -3,14 +3,52 @@ real single-device CPU; multi-device tests spawn subprocesses with
 ``--xla_force_host_platform_device_count`` themselves."""
 
 import os
+import signal
 import subprocess
 import sys
+import threading
 
 import numpy as np
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+
+
+def pytest_addoption(parser):
+    parser.addini(
+        "hang_timeout",
+        "per-test wall-clock limit in seconds (SIGALRM-based, no plugin "
+        "needed); 0 disables.  A hung service/batcher loop then FAILS that "
+        "test instead of stalling the whole suite.",
+        default="0",
+    )
+
+
+@pytest.hookimpl(wrapper=True)
+def pytest_runtest_call(item):
+    limit = float(item.config.getini("hang_timeout") or 0)
+    if (
+        limit <= 0
+        or not hasattr(signal, "SIGALRM")
+        or threading.current_thread() is not threading.main_thread()
+    ):
+        return (yield)
+
+    def _alarm(signum, frame):
+        pytest.fail(
+            f"test exceeded hang_timeout={limit:.0f}s (pytest.ini) — "
+            "probable hang in a service/dispatcher loop",
+            pytrace=False,
+        )
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.setitimer(signal.ITIMER_REAL, limit)
+    try:
+        return (yield)
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0)
+        signal.signal(signal.SIGALRM, old)
 
 
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 560) -> str:

@@ -1,0 +1,368 @@
+"""Online clustering service (DESIGN.md §10): batcher, compile cache,
+streaming assignment — including the §10 invariant that warmed
+steady-state traffic performs ZERO compiles (AOT counter + implicit
+jit-cache counter both flat)."""
+
+import warnings
+from concurrent.futures import wait
+
+import numpy as np
+import pytest
+
+from repro.core import cluster
+from repro.core.api import _interpret_input
+from repro.core.batched import bucket_signature
+from repro.core.dendrogram import cut_exemplars
+from repro.service import (
+    ClusteringService,
+    CompileCache,
+    ServiceConfig,
+    assign,
+    build_index,
+    engine_jit_cache_size,
+    warmup_signatures,
+)
+
+from tests.conftest import random_distance_matrix
+
+
+def _ragged_matrices(rng, count, n_lo=3, n_hi=16):
+    return [
+        random_distance_matrix(rng, int(rng.integers(n_lo, n_hi + 1))).astype(
+            np.float32
+        )
+        for _ in range(count)
+    ]
+
+
+def _resolve_all(futures, timeout=120.0):
+    done, not_done = wait(futures, timeout=timeout)
+    assert not not_done, f"{len(not_done)} requests never resolved"
+    return [f.result() for f in futures]
+
+
+# ---------------------------------------------------------------------------
+# the §10 invariant: warmed steady-state traffic never compiles
+# ---------------------------------------------------------------------------
+
+
+def test_zero_recompiles_steady_state(rng):
+    cfg = ServiceConfig(bucket_ns=(8, 16), max_batch=4, max_delay_ms=1.0)
+    with ClusteringService(cfg) as svc:
+        warmed = svc.warmup()
+        # declared working set: 2 buckets × batch paddings {1, 2, 4}
+        assert warmed == 6
+        compiles0 = svc.cache.stats.compiles
+        jit0 = engine_jit_cache_size()
+
+        mats = _ragged_matrices(rng, 30)        # sizes inside the buckets
+        results = _resolve_all([svc.submit(m) for m in mats])
+
+        assert svc.cache.stats.compiles == compiles0, "AOT cache compiled"
+        assert engine_jit_cache_size() == jit0, "implicit jit path compiled"
+        for res, m in zip(results, mats):
+            want = cluster(m, cfg.method, backend="serial")
+            np.testing.assert_array_equal(res.merges, want.merges)
+
+        # an undeclared bucket (n > 16) is served, but pays a recorded miss
+        big = random_distance_matrix(rng, 20).astype(np.float32)
+        res = svc.submit(big).result(timeout=120)
+        assert svc.cache.stats.compiles == compiles0 + 1
+        np.testing.assert_array_equal(
+            res.merges, cluster(big, cfg.method, backend="serial").merges
+        )
+
+
+def test_batcher_matches_single_problem_with_knobs(rng):
+    cfg = ServiceConfig(
+        method="average",
+        variant="lazy",
+        stop_at_k=3,
+        distance_threshold=2.0,
+        bucket_ns=(8,),
+        max_batch=3,
+        max_delay_ms=0.5,
+    )
+    with ClusteringService(cfg) as svc:
+        svc.warmup()
+        mats = _ragged_matrices(rng, 8, n_lo=4, n_hi=8)
+        for res, m in zip(_resolve_all([svc.submit(m) for m in mats]), mats):
+            want = cluster(
+                m, "average", backend="serial", variant="lazy",
+                stop_at_k=3, distance_threshold=2.0,
+            )
+            np.testing.assert_array_equal(res.merges, want.merges)
+            assert res.n == m.shape[0]
+
+
+def test_service_accepts_points_and_metric(rng):
+    with ClusteringService(ServiceConfig(bucket_ns=(8,), max_delay_ms=0.5)) as svc:
+        X = rng.normal(size=(7, 3)).astype(np.float32)
+        res = svc.submit(X, metric="euclidean").result(timeout=120)
+        want = cluster(X, "complete", metric="euclidean", backend="serial")
+        np.testing.assert_array_equal(res.merges, want.merges)
+        assert res.points is not None and res.metric == "euclidean"
+
+
+def test_service_kernel_engine(rng):
+    cfg = ServiceConfig(engine="kernel", bucket_ns=(8,), max_batch=2,
+                        max_delay_ms=0.5)
+    with ClusteringService(cfg) as svc:
+        mats = _ragged_matrices(rng, 3, n_lo=4, n_hi=8)
+        for res, m in zip(_resolve_all(svc.submit_many(mats)), mats):
+            want = cluster(m, "complete", backend="serial")
+            # kernel contract: merge indices exact, distances to tolerance
+            np.testing.assert_array_equal(res.merges[:, :2], want.merges[:, :2])
+            np.testing.assert_allclose(res.merges, want.merges,
+                                       rtol=1e-4, atol=1e-4)
+
+
+def test_submit_error_paths(rng):
+    with ClusteringService(ServiceConfig(bucket_ns=(8,))) as svc:
+        fut = svc.submit(np.zeros((1, 1), np.float32))      # n < 2
+        with pytest.raises(ValueError, match="at least 2"):
+            fut.result(timeout=10)
+        fut = svc.submit(np.zeros((5000, 5000), np.float32))  # above top bucket
+        with pytest.raises(ValueError, match="bucket"):
+            fut.result(timeout=10)
+        snap = svc.metrics.snapshot(svc.cache)
+        assert snap.n_failed == 2
+    # after close(), submission resolves with an error, not a hang
+    fut = svc.submit(random_distance_matrix(rng, 5))
+    with pytest.raises(RuntimeError, match="closed"):
+        fut.result(timeout=10)
+
+
+def test_metrics_accounting(rng):
+    cfg = ServiceConfig(bucket_ns=(8,), max_batch=4, max_delay_ms=20.0)
+    with ClusteringService(cfg) as svc:
+        svc.warmup()
+        mats = _ragged_matrices(rng, 4, n_lo=5, n_hi=8)
+        _resolve_all(svc.submit_many(mats))
+        snap = svc.metrics.snapshot(svc.cache)
+        assert snap.n_requests == 4
+        assert snap.n_batches >= 1
+        assert snap.p50_ms > 0 and snap.p99_ms >= snap.p50_ms
+        assert 0.0 <= snap.pad_waste < 1.0
+        assert snap.cache_hit_rate is not None
+
+
+# ---------------------------------------------------------------------------
+# compile cache
+# ---------------------------------------------------------------------------
+
+
+def test_compile_cache_lru_eviction():
+    cache = CompileCache(capacity=2)
+    sigs = [
+        bucket_signature(8, 1, method=m, engine="serial")
+        for m in ("single", "complete", "average")
+    ]
+    cache.get(sigs[0])
+    cache.get(sigs[1])
+    cache.get(sigs[0])                      # refresh: sigs[1] is now LRU
+    cache.get(sigs[2])                      # evicts sigs[1]
+    assert cache.stats.evictions == 1
+    assert sigs[1] not in cache and sigs[0] in cache and sigs[2] in cache
+    compiles = cache.stats.compiles
+    cache.get(sigs[1])                      # re-entry recompiles
+    assert cache.stats.compiles == compiles + 1
+    assert cache.stats.hits == 1 and cache.stats.misses == 4
+
+
+def test_warmup_signatures_enumerate_working_set():
+    sigs = warmup_signatures((8, 16), method="complete", max_batch=5)
+    # batch paddings {1, 2, 4, 8} per bucket
+    assert len(sigs) == 8
+    assert len(set(sigs)) == 8
+    assert {s.bucket_B for s in sigs} == {1, 2, 4, 8}
+    assert {s.bucket_n for s in sigs} == {8, 16}
+    with pytest.raises(ValueError, match="bucket grid"):
+        warmup_signatures((10,), method="complete")
+
+
+def test_cache_rejects_distributed_engine():
+    cache = CompileCache()
+    with pytest.raises(ValueError, match="distributed"):
+        cache.get(bucket_signature(8, 1, method="complete", engine="distributed"))
+
+
+def test_service_config_validation():
+    with pytest.raises(ValueError, match="bucket grid"):
+        ServiceConfig(bucket_ns=(7,))
+    with pytest.raises(ValueError, match="engine"):
+        ServiceConfig(engine="distributed")
+    with pytest.raises(ValueError, match="method"):
+        ServiceConfig(method="nope")
+    # a cache too small for the warmup working set would thrash the LRU
+    # and quietly break the zero-recompile contract — reject it up front
+    with pytest.raises(ValueError, match="working set"):
+        ServiceConfig(bucket_ns=(8, 16, 32, 64), max_batch=8, cache_capacity=10)
+
+
+# ---------------------------------------------------------------------------
+# streaming assignment
+# ---------------------------------------------------------------------------
+
+
+def _blobs(rng, centers, per, scale=0.4):
+    return np.concatenate(
+        [c + rng.normal(scale=scale, size=(per, len(c))) for c in centers]
+    ).astype(np.float32)
+
+
+def test_assign_matches_full_recluster(rng):
+    """Exact-nearest-exemplar regime: streamed labels == re-cluster labels."""
+    centers = np.array([[0.0, 0.0], [25.0, 0.0], [0.0, 25.0]])
+    base = _blobs(rng, centers, per=6)
+    held = _blobs(rng, centers, per=4)
+
+    res = cluster(base, "complete", backend="serial")
+    idx = build_index(res, k=3)
+    labels = assign(idx, held)
+
+    full = cluster(np.concatenate([base, held]), "complete", backend="serial")
+    lf = full.labels(3)
+    ex = res.exemplars(3)
+    for i in range(len(held)):
+        assert lf[len(base) + i] == lf[ex[labels[i]]]
+
+    # centroid index and the Pallas-kernel distance path agree
+    np.testing.assert_array_equal(
+        assign(build_index(res, 3, kind="centroid"), held), labels
+    )
+    np.testing.assert_array_equal(assign(idx, held, backend="kernel"), labels)
+    # single-query convenience
+    assert assign(idx, held[0]).shape == (1,)
+
+
+def test_assign_cosine_and_errors(rng):
+    X = rng.normal(size=(12, 5)).astype(np.float32)
+    res = cluster(X, "average", metric="euclidean", backend="serial")
+    idx = build_index(res, 3, metric="cosine")
+    assert assign(idx, X).shape == (12,)
+    with pytest.raises(ValueError, match="does not match"):
+        assign(idx, rng.normal(size=(3, 4)).astype(np.float32))
+    res_mat = cluster(random_distance_matrix(rng, 8), backend="serial")
+    with pytest.raises(ValueError, match="points"):
+        build_index(res_mat, 2)
+    with pytest.raises(ValueError, match="kind"):
+        build_index(res, 2, kind="mediod")
+
+
+def test_exemplars_normalize_triangle_input(rng):
+    """Medoids come from the matrix the TREE saw: upper-triangle-only
+    input (a documented valid form) must yield the same exemplars as the
+    equivalent full symmetric matrix."""
+    D = random_distance_matrix(rng, 12).astype(np.float32)
+    res_full = cluster(D, "complete", backend="serial")
+    res_tri = cluster(np.triu(D), "complete", backend="serial")
+    np.testing.assert_array_equal(res_tri.merges, res_full.merges)
+    np.testing.assert_array_equal(res_tri.exemplars(3), res_full.exemplars(3))
+
+
+def test_cancelled_future_does_not_kill_dispatcher(rng):
+    """A client cancelling its future must not wedge the service."""
+    cfg = ServiceConfig(bucket_ns=(8,), max_batch=4, max_delay_ms=50.0)
+    with ClusteringService(cfg) as svc:
+        svc.warmup()
+        mats = _ragged_matrices(rng, 3, n_lo=5, n_hi=8)
+        futs = svc.submit_many(mats)
+        futs[1].cancel()                # may or may not win the race
+        assert svc.flush(timeout=60)
+        for i in (0, 2):
+            if not futs[i].cancelled():
+                np.testing.assert_array_equal(
+                    futs[i].result(timeout=10).merges,
+                    cluster(mats[i], cfg.method, backend="serial").merges,
+                )
+        # dispatcher survived: a fresh request still round-trips
+        m = random_distance_matrix(rng, 6).astype(np.float32)
+        np.testing.assert_array_equal(
+            svc.submit(m).result(timeout=60).merges,
+            cluster(m, cfg.method, backend="serial").merges,
+        )
+
+
+def test_cut_exemplars_medoid_property(rng):
+    D = random_distance_matrix(rng, 14).astype(np.float32)
+    res = cluster(D, "complete", backend="serial")
+    labels, ex = cut_exemplars(res.merges, 4, D, n=res.n)
+    for c in range(4):
+        members = np.flatnonzero(labels == c)
+        assert labels[ex[c]] == c
+        want = members[np.argmin(D[np.ix_(members, members)].sum(1))]
+        assert ex[c] == want
+    with pytest.raises(ValueError, match="does not match"):
+        cut_exemplars(res.merges, 4, D[:5, :5], n=res.n)
+
+
+def test_cluster_batch_keep_inputs_flag(rng):
+    from repro.core import cluster_batch
+
+    X = rng.normal(size=(9, 3)).astype(np.float32)
+    lean = cluster_batch([X], "complete", backend="serial")[0]
+    assert lean.points is None and lean.distances is None  # default: no pinning
+    kept = cluster_batch([X], "complete", backend="serial", keep_inputs=True)[0]
+    assert kept.points is not None
+    assert kept.exemplars(2).shape == (2,)
+    np.testing.assert_array_equal(lean.merges, kept.merges)
+
+
+def test_result_exemplar_centroid_export(rng):
+    X = rng.normal(size=(10, 3)).astype(np.float32)
+    res = cluster(X, "ward", backend="serial")
+    ex = res.exemplars(3)
+    assert ex.shape == (3,) and len(np.unique(res.labels(3)[ex])) == 3
+    cent = res.centroids(3)
+    assert cent.shape == (3, 3)
+    labels = res.labels(3)
+    np.testing.assert_allclose(cent[0], X[labels == 0].mean(0), rtol=1e-6)
+    # matrix-input results can't produce centroids
+    res_mat = cluster(random_distance_matrix(rng, 8), backend="serial")
+    with pytest.raises(ValueError, match="points"):
+        res_mat.centroids(2)
+
+
+# ---------------------------------------------------------------------------
+# the _interpret_input disambiguation satellite
+# ---------------------------------------------------------------------------
+
+
+def test_square_asymmetric_points_warn(rng):
+    A = rng.normal(size=(6, 6))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        cluster(A, "complete", backend="serial")
+    assert any("not symmetric" in str(w.message) for w in caught)
+    # a genuinely symmetric matrix stays silent
+    D = random_distance_matrix(rng, 6)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        cluster(D, "complete", backend="serial")
+    assert not caught
+
+
+def test_is_distance_override(rng):
+    A = rng.normal(size=(6, 6))
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        as_points = cluster(A, "complete", backend="serial", is_distance=False)
+        as_matrix = cluster(A, "complete", backend="serial", is_distance=True)
+    assert not caught                     # explicit override silences the warn
+    assert as_points.points is not None and as_points.metric == "euclidean"
+    assert as_matrix.points is None
+    # the two readings genuinely differ
+    assert not np.array_equal(as_points.merges, as_matrix.merges)
+    want = cluster(
+        np.asarray(_interpret_input(A, "complete", "euclidean")[0]),
+        "complete", backend="serial",
+    )
+    np.testing.assert_array_equal(as_points.merges, want.merges)
+
+
+def test_is_distance_conflicts():
+    with pytest.raises(ValueError, match="metric"):
+        _interpret_input(np.zeros((4, 4)), "complete", "euclidean", True)
+    with pytest.raises(ValueError, match="square"):
+        _interpret_input(np.zeros((4, 3)), "complete", None, True)
