@@ -67,6 +67,17 @@ t = dict(
     batch_auto=timed(lambda: cluster_batch(mats, "complete")),
 )
 
+if {compaction}:
+    # stage-schedule sweep: one bucket-wide gather per boundary (lanes
+    # merge in lockstep) — on-rows verified bit-identical to off-rows
+    off = cluster_batch(mats, "complete", backend="serial", compaction=False)
+    on = cluster_batch(mats, "complete", backend="serial", compaction=True)
+    assert all(np.array_equal(a.merges, b.merges) for a, b in zip(on, off))
+    t["compact_off"] = timed(lambda: cluster_batch(
+        mats, "complete", backend="serial", compaction=False))
+    t["compact_on"] = timed(lambda: cluster_batch(
+        mats, "complete", backend="serial", compaction=True))
+
 # sanity: batched output == looped output on this exact workload
 want = [np.asarray(cluster(m, "complete", backend="serial").merges)
         for m in mats]
@@ -78,20 +89,23 @@ print(json.dumps({{"B": B, "n": n, "devices": len(jax.devices()),
 """
 
 
-def run(B: int = 64, n: int = 128, devices: int = 2, timeout: int = 900) -> dict:
+def run(B: int = 64, n: int = 128, devices: int = 2, timeout: int = 900,
+        compaction: bool = False) -> dict:
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
     out = subprocess.run(
-        [sys.executable, "-c", _SNIPPET.format(B=B, n=n)],
+        [sys.executable, "-c",
+         _SNIPPET.format(B=B, n=n, compaction=compaction)],
         capture_output=True, text=True, env=env, timeout=timeout)
     if out.returncode != 0:
         raise RuntimeError(f"bench_batch failed:\n{out.stderr[-2000:]}")
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
-def main(B: int = 64, n: int = 128, devices: int = 2):
-    r = run(B=B, n=n, devices=devices)
+def main(B: int = 64, n: int = 128, devices: int = 2,
+         compaction: bool = False):
+    r = run(B=B, n=n, devices=devices, compaction=compaction)
     t = r["times_s"]
     base = t["loop_auto"]
     print("name,us_per_call,derived")
@@ -102,6 +116,10 @@ def main(B: int = 64, n: int = 128, devices: int = 2):
     speedup = base / t["batch_auto"]
     print(f"batch_headline,{t['batch_auto'] * 1e6:.0f},"
           f"B={r['B']};n={r['n']};p={r['devices']};{speedup:.2f}x")
+    if compaction:
+        ratio = t["compact_off"] / t["compact_on"]
+        print(f"batch_compact_headline,{t['compact_on'] * 1e6:.0f},"
+              f"{ratio:.2f}x_vs_single_stage;outputs_verified")
     assert speedup >= 5.0, (
         f"batched engine must beat the auto-backend Python loop by >=5x, "
         f"got {speedup:.2f}x")
@@ -115,5 +133,7 @@ if __name__ == "__main__":
     ap.add_argument("--B", type=int, default=64)
     ap.add_argument("--n", type=int, default=128)
     ap.add_argument("--devices", type=int, default=2)
+    ap.add_argument("--compaction", action="store_true",
+                    help="add the stage-schedule off/on sweep rows")
     a = ap.parse_args()
-    main(a.B, a.n, a.devices)
+    main(a.B, a.n, a.devices, compaction=a.compaction)

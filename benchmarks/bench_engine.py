@@ -13,6 +13,12 @@ of the ``examples/`` dedup workloads:
   height: a data-dependent ``while_loop`` exit.
 * ``batch_<variant>``       — B ragged problems through ``cluster_batch``.
 
+``--compaction`` runs the stage-schedule sweep instead (EXPERIMENTS.md
+§Perf iteration 4): every serial variant and the ragged batch with
+``compaction`` off vs on, each on-row verified bit-identical to its
+off-row, plus a ``compact_headline`` off/on ratio (asserted ≥ 1.5× at
+n ≥ 512 — the acceptance gate of the compaction PR).
+
 Runs in-process (single CPU device; the distributed variants' collective
 story lives in ``bench_variants.py``).  Every timed configuration is also
 checked for merge-prefix/bit-identity against the baseline full run, so
@@ -91,7 +97,81 @@ def main(n: int = 512, B: int = 32, smoke: bool = False) -> dict:
     for name, sec in times.items():
         print(f"engine_{name},{sec * 1e6:.0f},{ref / sec:.2f}x_vs_baseline")
     print(f"engine_config,{n},B={B};stop_k={stop_k};thr=p50;"
-          f"smoke={int(smoke)};all_outputs_verified")
+          f"smoke={int(smoke)};compaction=auto;all_outputs_verified")
+    return times
+
+
+def main_compaction(n: int = 512, B: int = 32, smoke: bool = False) -> dict:
+    """The ``--compaction`` sweep: stage schedule off vs on, verified.
+
+    Off-rows pin ``compaction=False`` (the PR 3 single-stage loop — the
+    fused one-pass step is the default on both sides, it changes no
+    arithmetic); on-rows force the staged schedule.  Every on-run is
+    asserted bit-identical to its off-run before it is timed, so a wrong
+    gather/remap fails the bench (and CI) rather than printing a fast
+    lie.  The headline off/on ratio for the serial baseline is the
+    acceptance gate of the compaction PR: ≥ 1.5× at n = 512.
+    """
+    import jax
+
+    from repro.core import cluster, cluster_batch
+    from repro.core.engine import plan_stages
+
+    if smoke:
+        n, B = 96, 8
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(n, 8)).astype(np.float32)
+    D = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
+    batch_ns = [int(rng.integers(max(4, n // 16), max(6, n // 4))) for _ in range(B)]
+    mats = []
+    for nb in batch_ns:
+        x = rng.normal(size=(nb, 8)).astype(np.float32)
+        mats.append(np.sqrt(((x[:, None] - x[None]) ** 2).sum(-1)))
+
+    times: dict[str, float] = {}
+
+    def run_serial(**kw):
+        res = cluster(D, "complete", backend="serial", **kw)
+        jax.block_until_ready(res.merges)
+        return res
+
+    for variant in ("baseline", "rowmin", "lazy"):
+        off = run_serial(variant=variant, compaction=False)
+        on = run_serial(variant=variant, compaction=True)
+        assert np.array_equal(np.asarray(on.merges), np.asarray(off.merges)), (
+            f"compacted {variant} run diverged from the single-stage loop"
+        )
+        for mode, flag in (("off", False), ("on", True)):
+            times[f"serial_{variant}_{mode}"] = _timed(
+                lambda v=variant, f=flag: run_serial(variant=v, compaction=f)
+            )
+
+    off = cluster_batch(mats, "complete", backend="serial", compaction=False)
+    on = cluster_batch(mats, "complete", backend="serial", compaction=True)
+    assert all(np.array_equal(a.merges, b.merges) for a, b in zip(on, off)), (
+        "compacted ragged batch diverged from the single-stage loop"
+    )
+    for mode, flag in (("off", False), ("on", True)):
+        times[f"batch_{mode}"] = _timed(
+            lambda f=flag: cluster_batch(
+                mats, "complete", backend="serial", compaction=f))
+
+    print("name,us_per_call,derived")
+    for name, sec in times.items():
+        base = times.get(name.replace("_on", "_off"), sec)
+        note = (f"{base / sec:.2f}x_vs_off" if name.endswith("_on")
+                else "single_stage")
+        print(f"engine_compact_{name},{sec * 1e6:.0f},{note}")
+    headline = times["serial_baseline_off"] / times["serial_baseline_on"]
+    stages = plan_stages(n, n - 1)
+    print(f"engine_compact_headline,{times['serial_baseline_on'] * 1e6:.0f},"
+          f"n={n};stages={len(stages)};{headline:.2f}x_vs_single_stage;"
+          f"all_outputs_verified")
+    if n >= 512:
+        assert headline >= 1.5, (
+            f"compaction + fused step must give >=1.5x at n={n}, "
+            f"got {headline:.2f}x"
+        )
     return times
 
 
@@ -103,5 +183,10 @@ if __name__ == "__main__":
     ap.add_argument("--B", type=int, default=32)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes; verifies the variant matrix still runs")
+    ap.add_argument("--compaction", action="store_true",
+                    help="stage-schedule sweep: compaction off vs on")
     a = ap.parse_args()
-    main(n=a.n, B=a.B, smoke=a.smoke)
+    if a.compaction:
+        main_compaction(n=a.n, B=a.B, smoke=a.smoke)
+    else:
+        main(n=a.n, B=a.B, smoke=a.smoke)

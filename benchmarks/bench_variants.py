@@ -16,17 +16,21 @@ _SNIPPET = r"""
 import json, time, math
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.distributed import distributed_lance_williams, make_cluster_mesh, _run
+from repro.core.engine import resolve_compaction
 from repro.roofline.hlo_cost import HloCost
 
 n, p, variant = {n}, {p}, "{variant}"
+compaction = {compaction}
 rng = np.random.default_rng(0)
 X = rng.normal(size=(n, 8)).astype(np.float32)
 D = np.sqrt(((X[:, None] - X[None]) ** 2).sum(-1))
 mesh = make_cluster_mesh()
-res = distributed_lance_williams(D, "complete", mesh=mesh, variant=variant)
+res = distributed_lance_williams(D, "complete", mesh=mesh, variant=variant,
+                                 compaction=compaction)
 jax.block_until_ready(res.merges)
 t0 = time.perf_counter()
-res = distributed_lance_williams(D, "complete", mesh=mesh, variant=variant)
+res = distributed_lance_williams(D, "complete", mesh=mesh, variant=variant,
+                                 compaction=compaction)
 jax.block_until_ready(res.merges)
 wall = time.perf_counter() - t0
 
@@ -35,7 +39,9 @@ lowered = _run.lower(jax.ShapeDtypeStruct((n_pad, n_pad), jnp.float32),
                      jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
                      jax.ShapeDtypeStruct((n_pad,), jnp.float32),
                      method="complete", n_steps=n - 1, mesh=mesh,
-                     variant=variant)
+                     variant=variant,
+                     compaction=resolve_compaction(compaction, n_pad, n - 1,
+                                                   align=p))
 cost = HloCost(lowered.compile().as_text(), p).total()
 print(json.dumps({{"variant": variant, "wall_s": wall,
                    "flops_per_device": cost.flops,
@@ -43,7 +49,7 @@ print(json.dumps({{"variant": variant, "wall_s": wall,
 """
 
 
-def run(n: int = 768, p: int = 4):
+def run(n: int = 768, p: int = 4, compaction: bool = False):
     rows = []
     for variant in ("baseline", "rowmin", "lazy"):
         env = dict(os.environ)
@@ -51,7 +57,8 @@ def run(n: int = 768, p: int = 4):
         env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
         out = subprocess.run(
             [sys.executable, "-c",
-             _SNIPPET.format(n=n, p=p, variant=variant)],
+             _SNIPPET.format(n=n, p=p, variant=variant,
+                             compaction=compaction)],
             capture_output=True, text=True, env=env, timeout=900)
         if out.returncode != 0:
             raise RuntimeError(out.stderr[-2000:])
@@ -59,12 +66,14 @@ def run(n: int = 768, p: int = 4):
     return rows
 
 
-def main(n: int = 768, p: int = 4):
-    rows = run(n, p)
-    print("variant,wall_s,flops_per_device,coll_bytes_per_device")
+def main(n: int = 768, p: int = 4, compaction: bool = False):
+    rows = run(n, p, compaction=compaction)
+    print("name,us_per_call,derived")
+    tag = "_compact" if compaction else ""
     for r in rows:
-        print(f"{r['variant']},{r['wall_s']:.3f},{r['flops_per_device']:.3e},"
-              f"{r['coll_bytes_per_device']:.3e}")
+        print(f"lw_dist_{r['variant']}{tag},{r['wall_s'] * 1e6:.0f},"
+              f"flops/dev={r['flops_per_device']:.3e};"
+              f"coll_B/dev={r['coll_bytes_per_device']:.3e}")
     if rows[0]["wall_s"] > 0:
         for r in rows[1:]:
             print(f"# {r['variant']} vs baseline: "
@@ -74,4 +83,12 @@ def main(n: int = 768, p: int = 4):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=768)
+    ap.add_argument("--p", type=int, default=4)
+    ap.add_argument("--compaction", action="store_true",
+                    help="run with the engine stage schedule enabled")
+    a = ap.parse_args()
+    main(n=a.n, p=a.p, compaction=a.compaction)

@@ -16,7 +16,11 @@ Default sizes are CI-scale; pass --paper for the paper-scale n=1968 run.
 """
 
 import argparse
+import contextlib
+import io
+import json
 import os
+import subprocess
 import sys
 import traceback
 
@@ -28,11 +32,57 @@ for _p in (_ROOT, os.path.join(_ROOT, "src")):
         sys.path.insert(0, _p)
 
 
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "-C", _ROOT, "rev-parse", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — sha is metadata, never fail a bench
+        return "unknown"
+
+
+def _parse_rows(text: str) -> list[dict]:
+    """Parse the benches' ``name,us_per_call,derived`` CSV convention."""
+    rows = []
+    for line in text.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) != 3 or parts[0] in ("", "name") or parts[0].startswith("#"):
+            continue
+        if parts[0].endswith("_config"):
+            continue        # metadata line: field 2 is a size, not a timing
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        rows.append({"name": parts[0], "us_per_call": us, "derived": parts[2]})
+    return rows
+
+
+def _json_path(template: str, suite: str) -> str:
+    """Resolve ``--json`` output path for one suite.
+
+    A literal ``<suite>`` placeholder is substituted; otherwise the
+    suite name is suffixed before the extension so multi-suite runs
+    write one artifact each (``BENCH_engine.json``, ...).
+    """
+    if "<suite>" in template:
+        return template.replace("<suite>", suite)
+    root, ext = os.path.splitext(template)
+    return f"{root}_{suite}{ext or '.json'}"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper", action="store_true",
                     help="paper-scale sizes (n=1968; slower)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-smoke sizes for the suites that support it")
+    ap.add_argument("--json", default=None, metavar="BENCH_<suite>.json",
+                    help="also write each suite's rows as machine-readable "
+                         "JSON (schema: suite, git_sha, rows[{name, "
+                         "us_per_call, derived}]) for the CI perf artifact")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -48,6 +98,7 @@ def main() -> None:
     )
 
     n_scale = 1968 if args.paper else 384
+    smoke = args.smoke
     jobs = {
         "storage": lambda: bench_storage.main(n=n_scale, procs=(1, 2, 4, 8)),
         "linkage": lambda: bench_linkage.main(n=256 if not args.paper else 512),
@@ -55,29 +106,63 @@ def main() -> None:
         "variants": lambda: bench_variants.main(
             n=384 if not args.paper else 1024, p=4),
         "engine": lambda: bench_engine.main(
-            n=512 if not args.paper else 1968, B=32),
+            n=512 if not args.paper else 1968, B=32, smoke=smoke),
+        "compaction": lambda: bench_engine.main_compaction(
+            n=512 if not args.paper else 1968, B=32, smoke=smoke),
         "batch": lambda: bench_batch.main(
-            B=64, n=128 if not args.paper else 256),
+            B=64 if not smoke else 8, n=128 if not args.paper else 256,
+            compaction=True),
         "service": lambda: bench_service.main(
-            rate=300.0, duration=3.0 if not args.paper else 10.0),
+            rate=300.0, duration=3.0 if not args.paper else 10.0,
+            smoke=smoke),
         "scaling": lambda: bench_scaling.main(
             n=n_scale, procs=(1, 2, 4, 8) if not args.paper
             else (1, 2, 4, 8, 16)),
         "roofline": roofline_report.main,
     }
     failed = []
+    sha = _git_sha() if args.json else None
     for name, job in jobs.items():
         if args.only and name != args.only:
             continue
         print(f"\n===== bench:{name} =====")
+        buf = io.StringIO()
+        tee = _Tee(sys.stdout, buf) if args.json else sys.stdout
         try:
-            job()
+            with contextlib.redirect_stdout(tee):
+                job()
         except Exception as e:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
             print(f"bench:{name},FAILED,{type(e).__name__}: {e}")
+            continue
+        if args.json:
+            path = _json_path(args.json, name)
+            with open(path, "w") as fh:
+                json.dump(
+                    {"suite": name, "git_sha": sha,
+                     "rows": _parse_rows(buf.getvalue())},
+                    fh, indent=2,
+                )
+            print(f"bench:{name} rows -> {path}")
     if failed:
         sys.exit(1)
+
+
+class _Tee(io.TextIOBase):
+    """Mirror bench stdout to the console AND the JSON row parser."""
+
+    def __init__(self, *streams):
+        self._streams = streams
+
+    def write(self, s):  # noqa: D102
+        for st in self._streams:
+            st.write(s)
+        return len(s)
+
+    def flush(self):  # noqa: D102
+        for st in self._streams:
+            st.flush()
 
 
 if __name__ == '__main__':

@@ -14,7 +14,7 @@ from repro.core.batched import (
     bucket_signature,
     cluster_batch_merges,
 )
-from repro.core.engine import VARIANTS
+from repro.core.engine import VARIANTS, plan_stages, resolve_compaction
 from repro.core.lance_williams import LWResult, lance_williams, lance_williams_from_points
 from repro.core.linkage import METHODS, coefficients, default_metric, update_row
 
@@ -35,5 +35,7 @@ __all__ = [
     "default_metric",
     "lance_williams",
     "lance_williams_from_points",
+    "plan_stages",
+    "resolve_compaction",
     "update_row",
 ]

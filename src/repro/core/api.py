@@ -196,6 +196,7 @@ def cluster(
     variant: str = "baseline",
     stop_at_k: int = 1,
     distance_threshold: float | None = None,
+    compaction: bool | str = "auto",
     keep_inputs: bool = True,
 ) -> ClusterResult:
     """Hierarchically cluster *data* with the Lance-Williams engine.
@@ -211,6 +212,12 @@ def cluster(
         ops), or ``auto`` (distributed iff >1 device).
     variant / stop_at_k / distance_threshold: engine-level knobs shared
         by every backend — argmin primitive and early termination.
+    compaction: engine-level stage schedule (DESIGN.md §3) — pack live
+        rows into a half-size matrix each time the live count halves;
+        merges are unchanged (bit-identical on jnp backends), the dense
+        work drops to ~0.57×.  ``"auto"`` (default) enables it whenever
+        the plan has more than one stage; pass ``False`` to pin the
+        single-stage loop (tiny problems gain nothing from staging).
     keep_inputs: store the input points/distance matrix on the result
         (enables ``exemplars``/``centroids`` and the streaming-assignment
         export).  Pass ``False`` when accumulating many results — the
@@ -225,7 +232,8 @@ def cluster(
     if backend == "auto":
         backend = "distributed" if len(jax.devices()) > 1 else "serial"
 
-    stops = dict(stop_at_k=stop_at_k, distance_threshold=distance_threshold)
+    stops = dict(stop_at_k=stop_at_k, distance_threshold=distance_threshold,
+                 compaction=compaction)
     if backend == "serial":
         res = lance_williams(D, method=method, variant=variant, **stops)
     elif backend == "distributed":
@@ -301,6 +309,7 @@ def cluster_batch(
     variant: str = "baseline",
     stop_at_k: int = 1,
     distance_threshold: float | None = None,
+    compaction: bool | str = "auto",
     keep_inputs: bool = False,
 ) -> BatchResult:
     """Cluster MANY independent problems in one compiled program each bucket.
@@ -324,7 +333,9 @@ def cluster_batch(
     ``kernel`` backend matches merge *indices* exactly with merge
     distances equal to float tolerance (same contract as the
     single-problem kernel backend).  ``variant`` and the early-stop knobs
-    apply per problem.
+    apply per problem; ``compaction`` resolves per *bucket* (lockstep
+    lanes share each stage boundary) and never changes any problem's
+    merge list.
 
     ``keep_inputs=True`` stores each problem's points/distance matrix on
     its :class:`ClusterResult` (required for ``exemplars``/``centroids``
@@ -352,6 +363,7 @@ def cluster_batch(
         variant=variant,
         stop_at_k=stop_at_k,
         distance_threshold=distance_threshold,
+        compaction=compaction,
     )
     results = [
         ClusterResult(

@@ -22,8 +22,9 @@ Ragged batches are padded into **shape buckets** (the ``configs/shapes.py``
 idiom: a small static grid of shapes so compiles are amortized): problem
 ``n`` is rounded up to the next bucket, the batch axis is rounded up to a
 power of two, and XLA's jit cache then guarantees one compile per
-``(bucket_n, bucket_B, method, engine, variant)`` for the lifetime of the
-process.  Padded slots are born dead (``alive=False``) and padded
+``(bucket_n, bucket_B, method, engine, variant, compaction)`` for the
+lifetime of the process (a compacted run's whole stage schedule lives
+inside that one program).  Padded slots are born dead (``alive=False``) and padded
 *problems* have ``n_real=0``.  The vmap and shard_map engines emit merge
 lists bit-identical to the single-problem serial engine; the kernel
 engine matches merge indices exactly with distances equal to float
@@ -43,7 +44,14 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
-from repro.core.engine import AXIS, VARIANTS, LWResult, run_dense, symmetrize
+from repro.core.engine import (
+    AXIS,
+    VARIANTS,
+    LWResult,
+    resolve_compaction,
+    run_dense,
+    symmetrize,
+)
 from repro.core.linkage import METHODS
 
 #: Static padded-n grid (shape buckets).  Problems are rounded up to the
@@ -89,6 +97,24 @@ class BucketSignature:
     variant: str
     n_steps: int           # static trip count = max(bucket_n - stop_at_k, 0)
     with_threshold: bool   # structural: while_loop vs fori_loop
+    compaction: bool = False  # structural: staged vs single-stage loop
+
+
+def _resolve_bucket_compaction(flag, engine: str, bucket_n: int,
+                               n_steps: int) -> bool:
+    """Resolved (canonical) compaction flag for one bucket dispatch.
+
+    The stage plan runs on the bucket's padded shape, so the switch is a
+    *bucket* property: ``"auto"`` resolves identically for every request
+    the bucket serves, and a degenerate plan (tiny bucket, lane floor)
+    canonicalizes to ``False`` — one signature, one executable.  All
+    stages of a compacted run live inside that one executable.
+    """
+    if engine == "kernel":
+        from repro.kernels.ops import resolve_kernel_compaction
+
+        return resolve_kernel_compaction(flag, bucket_n, n_steps)
+    return resolve_compaction(flag, bucket_n, n_steps)
 
 
 def bucket_signature(
@@ -101,23 +127,28 @@ def bucket_signature(
     stop_at_k: int = 1,
     with_threshold: bool = False,
     b_multiple: int = 1,
+    compaction: bool | str = "auto",
 ) -> BucketSignature:
     """Signature of the bucket serving ``batch`` problems of ≤ ``n`` items.
 
     ``n`` rounds up to the bucket grid and ``batch`` to a power of two
     (times ``b_multiple``, the device count for the sharded engine) —
     exactly the rounding :func:`cluster_batch_merges` performs, so a key
-    computed here matches the dispatch it predicts.
+    computed here matches the dispatch it predicts.  ``compaction`` may
+    be the user knob (``"auto"``); the signature stores the *resolved*
+    per-bucket value.
     """
     bn = bucket_n(n)
+    n_steps = max(bn - stop_at_k, 0)
     return BucketSignature(
         bucket_n=bn,
         bucket_B=bucket_batch(batch, b_multiple),
         method=method,
         engine=engine,
         variant=variant,
-        n_steps=max(bn - stop_at_k, 0),
+        n_steps=n_steps,
         with_threshold=with_threshold,
+        compaction=_resolve_bucket_compaction(compaction, engine, bn, n_steps),
     )
 
 
@@ -147,7 +178,7 @@ class BatchStats:
 
 
 def _vmap_engine(Db, n_real, threshold, *, method, n_steps, variant,
-                 with_threshold):
+                 with_threshold, compaction=False):
     """The shared batched composition: symmetrize + vmap of ``run_dense``.
 
     Finished problems simply churn garbage merge rows (their matrices go
@@ -157,6 +188,11 @@ def _vmap_engine(Db, n_real, threshold, *, method, n_steps, variant,
     lanes — an exhausted (all-inf) problem reads ``dmin = +inf`` and
     stops contributing work.  The threshold value is a traced operand
     (closed over, unbatched) so per-call radii share one compile.
+
+    Compaction stage boundaries are bucket-wide: lanes merge in
+    lockstep, so ONE gather pass per boundary re-packs every lane (a
+    lane that ran out of live slots — ragged padding, threshold stop —
+    is already below the bound and just compacts its survivors).
     """
     Db = symmetrize(Db)
     alive0 = jnp.arange(Db.shape[-1])[None, :] < n_real[:, None]
@@ -169,6 +205,7 @@ def _vmap_engine(Db, n_real, threshold, *, method, n_steps, variant,
             n_steps=n_steps,
             variant=variant,
             distance_threshold=threshold if with_threshold else None,
+            compaction=compaction,
         )
 
     return jax.vmap(run)(Db, alive0)
@@ -176,23 +213,24 @@ def _vmap_engine(Db, n_real, threshold, *, method, n_steps, variant,
 
 @partial(
     jax.jit,
-    static_argnames=("method", "n_steps", "variant", "with_threshold"),
+    static_argnames=("method", "n_steps", "variant", "with_threshold",
+                     "compaction"),
 )
 def _run_vmap(Db, n_real, threshold, *, method, n_steps, variant,
-              with_threshold):
+              with_threshold, compaction=False):
     """Serial batched engine: the vmap composition on one device."""
     return _vmap_engine(Db, n_real, threshold, method=method,
                         n_steps=n_steps, variant=variant,
-                        with_threshold=with_threshold)
+                        with_threshold=with_threshold, compaction=compaction)
 
 
 @partial(
     jax.jit,
     static_argnames=("method", "n_steps", "mesh", "variant",
-                     "with_threshold"),
+                     "with_threshold", "compaction"),
 )
 def _run_sharded(Db, n_real, threshold, *, method, n_steps, mesh, variant,
-                 with_threshold):
+                 with_threshold, compaction=False):
     """Distributed batched engine: whole problems sharded over the mesh.
 
     Batch-axis ``shard_map`` — each device runs the same vmap
@@ -202,7 +240,8 @@ def _run_sharded(Db, n_real, threshold, *, method, n_steps, mesh, variant,
     def body(D_local, n_local, thr):
         return _vmap_engine(D_local, n_local, thr, method=method,
                             n_steps=n_steps, variant=variant,
-                            with_threshold=with_threshold)
+                            with_threshold=with_threshold,
+                            compaction=compaction)
 
     return shard_map(
         body,
@@ -213,7 +252,7 @@ def _run_sharded(Db, n_real, threshold, *, method, n_steps, mesh, variant,
 
 
 def _run_kernel(Db, n_real, threshold, *, method, n_steps, variant,
-                with_threshold):
+                with_threshold, compaction=False):
     """Kernel batched engine: vmap of the Pallas composition."""
     from repro.kernels.ops import lance_williams_kernelized_batch
 
@@ -226,6 +265,7 @@ def _run_kernel(Db, n_real, threshold, *, method, n_steps, variant,
         distance_threshold=(
             float(threshold) if with_threshold else None
         ),
+        compaction=compaction,
     )
 
 
@@ -280,6 +320,7 @@ def cluster_batch_merges(
     variant: str = "baseline",
     stop_at_k: int = 1,
     distance_threshold: float | None = None,
+    compaction: bool | str = "auto",
 ) -> tuple[list[np.ndarray], BatchStats]:
     """Cluster many independent ``(n_b, n_b)`` distance matrices at once.
 
@@ -342,6 +383,7 @@ def cluster_batch_merges(
             stop_at_k=stop_at_k,
             with_threshold=distance_threshold is not None,
             b_multiple=b_multiple,
+            compaction=compaction,
         )
         B_pad = sig.bucket_B
         padded_problems += B_pad - len(idxs)
@@ -357,6 +399,7 @@ def cluster_batch_merges(
             n_steps=sig.n_steps,
             variant=variant,
             with_threshold=sig.with_threshold,
+            compaction=sig.compaction,
         )
         if engine == "serial":
             res = _run_vmap(Db, n_real, thr, **kwargs)

@@ -44,6 +44,7 @@ from repro.core.engine import (
     VARIANTS,
     LWResult,
     make_sharded_body,
+    resolve_compaction,
     resolve_n_steps,
     symmetrize,
 )
@@ -72,7 +73,8 @@ def _pad_matrix(D: np.ndarray | jax.Array, n_pad: int) -> jax.Array:
 
 @partial(
     jax.jit,
-    static_argnames=("method", "n_steps", "mesh", "variant", "with_threshold"),
+    static_argnames=("method", "n_steps", "mesh", "variant", "with_threshold",
+                     "compaction"),
 )
 def _run(
     D,
@@ -85,11 +87,13 @@ def _run(
     mesh: Mesh,
     variant: str,
     with_threshold: bool = False,
+    compaction: bool = False,
 ):
     # the threshold is a traced replicated operand (only None-vs-set is
     # structural), so distinct dedup radii share one compiled program
     body = make_sharded_body(
-        method, n_steps, variant, with_threshold=with_threshold
+        method, n_steps, variant, with_threshold=with_threshold,
+        compaction=compaction,
     )
     return shard_map(
         body,
@@ -107,11 +111,17 @@ def distributed_lance_williams(
     *,
     stop_at_k: int = 1,
     distance_threshold: float | None = None,
+    compaction: bool | str = "auto",
 ) -> LWResult:
     """Cluster an ``(n, n)`` distance matrix across every device of *mesh*.
 
     The matrix is padded to a multiple of the device count (padding slots are
     born dead) and block-row sharded; the result merge list is replicated.
+    ``compaction`` enables the engine's stage schedule (DESIGN.md §3): at
+    each power-of-two boundary the live rows are re-sharded into
+    ``size/2p``-row blocks, so per-device storage shrinks as the run
+    progresses; ``"auto"`` turns it on whenever the plan has more than
+    one stage.
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
@@ -129,6 +139,7 @@ def distributed_lance_williams(
     alive0 = (jnp.arange(n_pad) < n)
     sizes0 = alive0.astype(jnp.float32)
 
+    n_steps = resolve_n_steps(n, stop_at_k)
     Dp = jax.device_put(Dp, NamedSharding(mesh, P(AXIS, None)))
     merges, n_merges = _run(
         Dp,
@@ -136,10 +147,11 @@ def distributed_lance_williams(
         sizes0,
         jnp.float32(0.0 if distance_threshold is None else distance_threshold),
         method=method,
-        n_steps=resolve_n_steps(n, stop_at_k),
+        n_steps=n_steps,
         mesh=mesh,
         variant=variant,
         with_threshold=distance_threshold is not None,
+        compaction=resolve_compaction(compaction, n_pad, n_steps, align=p),
     )
     return LWResult(merges=merges, n_merges=n_merges)
 

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.core.engine import (
     VARIANTS,
     LWResult,
+    resolve_compaction,
     resolve_n_steps,
     run_dense,
     symmetrize,
@@ -40,9 +41,11 @@ __all__ = ["LWResult", "lance_williams", "lance_williams_from_points"]
 
 @partial(
     jax.jit,
-    static_argnames=("method", "variant", "stop_at_k", "with_threshold"),
+    static_argnames=("method", "variant", "stop_at_k", "with_threshold",
+                     "compaction"),
 )
-def _run(D, threshold, *, method, variant, stop_at_k, with_threshold):
+def _run(D, threshold, *, method, variant, stop_at_k, with_threshold,
+         compaction=False):
     # the threshold is a traced operand (only None-vs-set is structural),
     # so distinct dedup radii share one compiled loop
     D = symmetrize(D)
@@ -54,6 +57,7 @@ def _run(D, threshold, *, method, variant, stop_at_k, with_threshold):
         n_steps=resolve_n_steps(n, stop_at_k),
         variant=variant,
         distance_threshold=threshold if with_threshold else None,
+        compaction=compaction,
     )
 
 
@@ -64,6 +68,7 @@ def lance_williams(
     variant: str = "baseline",
     stop_at_k: int = 1,
     distance_threshold: float | None = None,
+    compaction: bool | str = "auto",
 ) -> LWResult:
     """Run serial Lance-Williams clustering on an ``(n, n)`` distance matrix.
 
@@ -72,7 +77,12 @@ def lance_williams(
     the argmin primitive (:data:`repro.core.engine.VARIANTS`).
     ``stop_at_k`` / ``distance_threshold`` stop the merge loop early: at
     ``k`` remaining clusters (statically fewer trips) and/or before the
-    first merge whose distance exceeds the threshold.
+    first merge whose distance exceeds the threshold.  ``compaction``
+    enables the engine's stage schedule (live rows packed into a
+    half-size matrix each time the live count halves — bit-identical
+    merges, ~0.57× the dense work); ``"auto"`` turns it on whenever the
+    plan has more than one stage, i.e. for problems past the first
+    boundary (``n >= 2 *`` :data:`repro.core.engine.MIN_STAGE_N`).
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
@@ -81,6 +91,7 @@ def lance_williams(
     D = jnp.asarray(D, jnp.float32)
     if D.ndim != 2 or D.shape[0] != D.shape[1]:
         raise ValueError(f"distance matrix must be square, got {D.shape}")
+    n = int(D.shape[0])
     return _run(
         D,
         jnp.float32(0.0 if distance_threshold is None else distance_threshold),
@@ -88,6 +99,9 @@ def lance_williams(
         variant=variant,
         stop_at_k=stop_at_k,
         with_threshold=distance_threshold is not None,
+        compaction=resolve_compaction(
+            compaction, n, resolve_n_steps(n, stop_at_k)
+        ),
     )
 
 

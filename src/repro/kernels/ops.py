@@ -19,8 +19,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import (
+    KERNEL_STAGE_ALIGN,
     VARIANTS,
     LWResult,
+    resolve_compaction,
     resolve_n_steps,
     run_kernel,
     symmetrize,
@@ -108,14 +110,25 @@ def _check(method: str, variant: str) -> None:
         raise ValueError(f"unknown variant {variant!r}; pick from {VARIANTS}")
 
 
+def resolve_kernel_compaction(flag, n: int, n_steps: int) -> bool:
+    """Kernel-path compaction switch: the plan runs on the lane-padded
+    size and stages stay multiples of :data:`KERNEL_STAGE_ALIGN`."""
+    npad = n + ((-n) % KERNEL_STAGE_ALIGN)
+    return resolve_compaction(
+        flag, npad, n_steps,
+        min_stage=KERNEL_STAGE_ALIGN, align=KERNEL_STAGE_ALIGN,
+    )
+
+
 @partial(
     jax.jit,
     static_argnames=(
         "method", "variant", "stop_at_k", "with_threshold", "block_m",
+        "compaction",
     ),
 )
 def _kernelized_run(D, threshold, *, method, variant, stop_at_k,
-                    with_threshold, block_m):
+                    with_threshold, block_m, compaction=False):
     D = symmetrize(D)
     n = D.shape[0]
 
@@ -131,6 +144,7 @@ def _kernelized_run(D, threshold, *, method, variant, stop_at_k,
         distance_threshold=threshold if with_threshold else None,
         block_m=block_m,
         interpret=_interpret(),
+        compaction=compaction,
     )
 
 
@@ -142,17 +156,22 @@ def lance_williams_kernelized(
     stop_at_k: int = 1,
     distance_threshold: float | None = None,
     block_m: int = 256,
+    compaction: bool | str = "auto",
 ) -> LWResult:
-    """Serial LW with Pallas inner loops (min-scan + fused row update).
+    """Serial LW with Pallas inner loops (the fused one-pass ``lw_step``
+    kernel for ``baseline``/``rowmin``; min-scan + ``lw_update`` for the
+    ``lazy`` drain).
 
     Merge indices are bit-compatible with
     :func:`repro.core.lance_williams.lance_williams` (same masking, same
     row-major tie-breaking) with float-tolerance distances — validated in
-    tests.  ``variant``/``stop_at_k``/``distance_threshold`` behave as on
-    every other backend (engine-level features; the threshold value is a
-    traced operand, so it never triggers a recompile).
+    tests.  ``variant``/``stop_at_k``/``distance_threshold``/``compaction``
+    behave as on every other backend (engine-level features; the
+    threshold value is a traced operand, so it never triggers a
+    recompile; compaction stages stay lane-aligned).
     """
     _check(method, variant)
+    n = int(D.shape[0])
     return _kernelized_run(
         D,
         jnp.float32(0.0 if distance_threshold is None else distance_threshold),
@@ -161,6 +180,9 @@ def lance_williams_kernelized(
         stop_at_k=stop_at_k,
         with_threshold=distance_threshold is not None,
         block_m=block_m,
+        compaction=resolve_kernel_compaction(
+            compaction, n, resolve_n_steps(n, stop_at_k)
+        ),
     )
 
 
@@ -168,10 +190,11 @@ def lance_williams_kernelized(
     jax.jit,
     static_argnames=(
         "method", "n_steps", "variant", "with_threshold", "block_m",
+        "compaction",
     ),
 )
 def _kernelized_batch_run(Db, n_real, threshold, *, method, n_steps, variant,
-                          with_threshold, block_m):
+                          with_threshold, block_m, compaction=False):
     Db = symmetrize(Db)
     B, n_pad = Db.shape[0], Db.shape[1]
 
@@ -190,6 +213,7 @@ def _kernelized_batch_run(Db, n_real, threshold, *, method, n_steps, variant,
             distance_threshold=threshold if with_threshold else None,
             block_m=block_m,
             interpret=_interpret(),
+            compaction=compaction,
         )
 
     return jax.vmap(run)(Dp, alive0)
@@ -204,6 +228,7 @@ def lance_williams_kernelized_batch(
     variant: str = "baseline",
     distance_threshold: float | None = None,
     block_m: int = 256,
+    compaction: bool | str = "auto",
 ) -> LWResult:
     """Batched serial LW with Pallas inner loops — ``vmap`` of the
     single-problem composition.
@@ -214,6 +239,11 @@ def lance_williams_kernelized_batch(
     grid dimension.  Returns batched ``LWResult``: ``(B, n_steps, 4)``
     merges (rows past problem ``b``'s real merges are garbage — the
     scheduler slices them off) and ``(B,)`` merge counts.
+
+    ``compaction`` resolves on the lane-padded batch shape (stages stay
+    128-multiples); the bucket scheduler passes its signature's already
+    resolved flag, direct callers get the same ``"auto"`` policy as
+    every other entry point.
     """
     _check(method, variant)
     return _kernelized_batch_run(
@@ -225,4 +255,7 @@ def lance_williams_kernelized_batch(
         variant=variant,
         with_threshold=distance_threshold is not None,
         block_m=block_m,
+        compaction=resolve_kernel_compaction(
+            compaction, int(Db.shape[-1]), n_steps
+        ),
     )

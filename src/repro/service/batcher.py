@@ -73,6 +73,10 @@ class ServiceConfig:
     variant: str = "baseline"
     stop_at_k: int = 1
     distance_threshold: float | None = None
+    # engine compaction schedule; "auto" stages buckets past the first
+    # boundary and canonicalizes smaller ones to the single-stage loop,
+    # so the warmed working set stays one executable per (bucket, B).
+    compaction: bool | str = "auto"
     max_batch: int = 8                 # close the window at this many requests
     max_delay_ms: float = 2.0          # batching window opened by first request
     bucket_ns: tuple[int, ...] = (8, 16, 32, 64)
@@ -94,6 +98,10 @@ class ServiceConfig:
             raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
         if self.max_delay_ms < 0:
             raise ValueError(f"max_delay_ms must be >= 0, got {self.max_delay_ms}")
+        if self.compaction not in (True, False, "auto"):
+            raise ValueError(
+                f"compaction must be a bool or 'auto', got {self.compaction!r}"
+            )
         for n in self.bucket_ns:
             if n not in BUCKETS:
                 raise ValueError(
@@ -239,6 +247,7 @@ class ClusteringService:
                 stop_at_k=cfg.stop_at_k,
                 with_threshold=cfg.distance_threshold is not None,
                 max_batch=cfg.max_batch,
+                compaction=cfg.compaction,
             )
         )
 
@@ -378,6 +387,7 @@ class ClusteringService:
             variant=cfg.variant,
             stop_at_k=cfg.stop_at_k,
             with_threshold=cfg.distance_threshold is not None,
+            compaction=cfg.compaction,
         )
         fn = self.cache.get(sig)
 

@@ -78,6 +78,7 @@ def _compile(sig: BucketSignature) -> Callable:
         n_steps=sig.n_steps,
         variant=sig.variant,
         with_threshold=sig.with_threshold,
+        compaction=sig.compaction,
     )
     if sig.engine == "serial":
         from repro.core.batched import _run_vmap as fn
@@ -158,6 +159,7 @@ def warmup_signatures(
     stop_at_k: int = 1,
     with_threshold: bool = False,
     max_batch: int = 1,
+    compaction: bool | str = "auto",
 ) -> list[BucketSignature]:
     """The declarative warmup list for a traffic mix.
 
@@ -167,6 +169,14 @@ def warmup_signatures(
     ``bucket_batch(max_batch)``, so the working set is
     ``len(bucket_ns) × (log2(max_batch) + 1)`` executables — warm them
     all and steady-state traffic performs zero compiles.
+
+    ``compaction`` must match the service's knob: the resolved per-bucket
+    stage schedule is part of the :class:`BucketSignature` (a compacted
+    run's stages all live inside that one executable), so warming with
+    the same flag covers every stage sub-program — the first compacted
+    request on a warmed service performs no compile.  Buckets below the
+    first stage boundary canonicalize to ``compaction=False`` and share
+    the single-stage executable.
     """
     for n in bucket_ns:
         if n not in BUCKETS:
@@ -187,6 +197,7 @@ def warmup_signatures(
                     variant=variant,
                     stop_at_k=stop_at_k,
                     with_threshold=with_threshold,
+                    compaction=compaction,
                 )
             )
             B *= 2

@@ -216,6 +216,165 @@ def test_early_stopped_labels_floor(rng):
 
 
 # ---------------------------------------------------------------------------
+# compaction schedule (stage plan, gather pass, merge remap)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_stages_covers_and_bounds():
+    from repro.core.engine import MIN_STAGE_N, plan_stages
+
+    for n in (8, 33, 64, 100, 512, 1968):
+        for n_steps in (0, 1, n // 2, n - 1):
+            stages = plan_stages(n, n_steps)
+            # every merge is scheduled exactly once, sizes strictly shrink
+            assert sum(steps for _, steps in stages) == n_steps
+            sizes = [sz for sz, _ in stages]
+            assert sizes[0] == n
+            assert all(a > b for a, b in zip(sizes, sizes[1:]))
+            assert all(sz >= MIN_STAGE_N for sz in sizes[1:])
+            # boundary legality: a stage only starts once the live count
+            # provably fits its matrix (live <= size after the merges so far)
+            done = 0
+            for sz, steps in stages:
+                assert n - done <= sz or sz == n
+                done += steps
+    # alignment floor (kernel lanes / shard counts)
+    for p in (2, 4):
+        assert all(sz % p == 0 for sz, _ in plan_stages(96, 95, align=p))
+    assert plan_stages(384, 383, min_stage=128, align=128) == ((384, 383),)
+
+
+def test_resolve_compaction_canonicalizes():
+    from repro.core.engine import resolve_compaction
+
+    assert resolve_compaction("auto", 512, 511)
+    assert resolve_compaction(True, 512, 511)
+    assert not resolve_compaction(False, 512, 511)
+    # degenerate plans (tiny n, aggressive stop_at_k) resolve False even
+    # when forced on — no duplicate executable for a no-op schedule
+    assert not resolve_compaction(True, 16, 15)
+    assert not resolve_compaction("auto", 512, 200)
+    with pytest.raises(ValueError, match="compaction"):
+        resolve_compaction("sometimes", 64, 63)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_serial_compaction_bit_identical(variant, rng):
+    for n in (64, 100):
+        D = _D(rng, n)
+        base = np.asarray(
+            lance_williams(D, "complete", variant=variant,
+                           compaction=False).merges
+        )
+        got = np.asarray(
+            lance_williams(D, "complete", variant=variant,
+                           compaction=True).merges
+        )
+        np.testing.assert_array_equal(got, base)
+        validate_merges(got, n=n)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_serial_compaction_all_methods(method, rng):
+    D = _D(rng, 70, method)
+    base = np.asarray(lance_williams(D, method, compaction=False).merges)
+    got = np.asarray(lance_williams(D, method, compaction=True).merges)
+    np.testing.assert_array_equal(got, base)
+
+
+def test_compaction_early_stop_matrix(rng):
+    """stop_at_k / distance_threshold × stage boundaries: the stop may
+    land inside any stage and later stages must run zero trips."""
+    n = 100
+    D = _D(rng, n)
+    full = np.asarray(lance_williams(D, "complete", compaction=False).merges)
+    # stop_at_k before the first boundary (plan degenerates), on it, past it
+    for k in (60, 50, 20, 5):
+        got = lance_williams(D, "complete", stop_at_k=k, compaction=True)
+        np.testing.assert_array_equal(np.asarray(got.merges), full[: n - k])
+    # threshold landing inside stage 0 / stage 1 / the tail stage
+    for t in (30, 60, 90):
+        thr = float(full[t, 2])
+        got = lance_williams(
+            D, "complete", distance_threshold=thr, compaction=True
+        )
+        nm = int(got.n_merges)
+        m = np.asarray(got.merges)
+        np.testing.assert_array_equal(m[:nm], full[:nm])
+        assert full[nm, 2] > thr
+        assert not m[nm:].any(), "rows past n_merges must stay zero"
+
+
+@pytest.mark.parametrize("variant", ("baseline", "lazy"))
+def test_batched_compaction_ragged_bucket(variant, rng):
+    """One ragged bucket (lockstep lanes, exhausted lanes compact their
+    survivors) + a stop_at_k interaction, vs the uncompacted engine."""
+    mats = [_D(rng, n) for n in (70, 100, 65, 33)]
+    base = cluster_batch(mats, "complete", backend="serial",
+                         variant=variant, compaction=False)
+    got = cluster_batch(mats, "complete", backend="serial",
+                        variant=variant, compaction=True)
+    for g, b in zip(got, base):
+        np.testing.assert_array_equal(g.merges, b.merges)
+    stop = cluster_batch(mats, "complete", backend="serial",
+                         variant=variant, stop_at_k=4, compaction=True)
+    for s, b, m in zip(stop, base, mats):
+        np.testing.assert_array_equal(
+            s.merges, np.asarray(b.merges)[: m.shape[0] - 4]
+        )
+
+
+def test_batched_compaction_threshold(rng):
+    mats = [_D(rng, n) for n in (70, 90)]
+    base = cluster_batch(mats, "complete", backend="serial", compaction=False)
+    thr = float(np.asarray(base[0].merges)[40, 2])
+    got = cluster_batch(mats, "complete", backend="serial",
+                        distance_threshold=thr, compaction=True)
+    for g, b in zip(got, base):
+        fm = np.asarray(b.merges)
+        nm = g.n_merges
+        np.testing.assert_array_equal(g.merges, fm[:nm])
+        if nm < len(fm):
+            assert fm[nm, 2] > thr
+
+
+@pytest.mark.slow
+def test_kernel_compaction_index_identical(rng):
+    """Staged kernel run (npad 256 → 2 stages) vs dense and vs the
+    single-stage kernel loop — interpret mode, hence slow."""
+    from repro.kernels.ops import lance_williams_kernelized
+
+    D = _D(rng, 200)
+    dense = np.asarray(lance_williams(D, "complete").merges)
+    on = np.asarray(
+        lance_williams_kernelized(D, "complete", compaction=True).merges
+    )
+    off = np.asarray(
+        lance_williams_kernelized(D, "complete", compaction=False).merges
+    )
+    np.testing.assert_array_equal(on[:, :2], dense[:, :2])
+    np.testing.assert_array_equal(on, off)
+    np.testing.assert_allclose(on, dense, rtol=1e-4, atol=1e-5)
+
+
+def test_bucket_signature_resolves_compaction():
+    from repro.core.batched import bucket_signature
+
+    hot = bucket_signature(100, 4, method="complete", compaction="auto")
+    assert hot.bucket_n == 128 and hot.compaction
+    cold = bucket_signature(16, 4, method="complete", compaction="auto")
+    assert not cold.compaction
+    # kernel engine resolves on the lane-padded plan: every bucket <= 128
+    # pads to a single 128-stage, and 256 halves to the 128 floor
+    assert not bucket_signature(
+        100, 4, method="complete", engine="kernel", compaction="auto"
+    ).compaction
+    assert bucket_signature(
+        256, 4, method="complete", engine="kernel", compaction="auto"
+    ).compaction
+
+
+# ---------------------------------------------------------------------------
 # satellite regressions
 # ---------------------------------------------------------------------------
 
@@ -289,6 +448,24 @@ rt = distributed_lance_williams(D, "complete", mesh=mesh,
 nm = int(rt.n_merges)
 assert np.array_equal(np.asarray(rt.merges)[:nm], full[:nm])
 assert full[nm, 2] > thr >= full[nm - 1, 2]
+
+# compaction: n=96 on p=4 stages (96,48),(48,47) — live rows re-sharded
+# to 48/4-row blocks at the boundary, merges identical to uncompacted
+Xc = rng.normal(size=(96, 5))
+Dc = np.sqrt(((Xc[:,None,:]-Xc[None,:,:])**2).sum(-1))
+fullc = np.asarray(lance_williams(Dc, "complete", compaction=False).merges)
+for variant in ("baseline", "lazy"):
+    rc = distributed_lance_williams(Dc, "complete", mesh=mesh,
+                                    variant=variant, compaction=True)
+    mc = np.asarray(rc.merges)
+    assert np.array_equal(mc[:, :2], fullc[:, :2]), ("compact", variant)
+    assert np.allclose(mc[:, 2], fullc[:, 2], rtol=1e-4, atol=1e-5)
+thr_c = float(fullc[70, 2])
+rc = distributed_lance_williams(Dc, "complete", mesh=mesh,
+                                distance_threshold=thr_c, compaction=True)
+nmc = int(rc.n_merges)
+assert np.array_equal(np.asarray(rc.merges)[:nmc], fullc[:nmc])
+assert fullc[nmc, 2] > thr_c
 
 # batched distributed engine (while_loop under shard_map-over-problems)
 from repro.core import cluster, cluster_batch

@@ -73,6 +73,39 @@ def test_zero_recompiles_steady_state(rng):
         )
 
 
+def test_zero_recompiles_compacted_buckets(rng):
+    """Warmup must cover the stage schedule: buckets past the first
+    boundary resolve ``compaction="auto"`` to a staged executable, and
+    the FIRST compacted request on a warmed service performs no compile
+    (AOT counter and implicit jit caches both flat)."""
+    cfg = ServiceConfig(bucket_ns=(64, 128), max_batch=2, max_delay_ms=1.0,
+                        compaction="auto")
+    with ClusteringService(cfg) as svc:
+        warmed = svc.warmup()
+        assert warmed == 4                  # 2 buckets × batch paddings {1, 2}
+        sigs = svc.cache.signatures()
+        assert all(s.compaction for s in sigs), (
+            "both declared buckets are past the first stage boundary — "
+            "their warmed signatures must carry the resolved staged flag"
+        )
+        compiles0 = svc.cache.stats.compiles
+        jit0 = engine_jit_cache_size()
+
+        mats = [
+            random_distance_matrix(rng, n).astype(np.float32)
+            for n in (40, 100, 70, 128)
+        ]
+        results = _resolve_all([svc.submit(m) for m in mats])
+
+        assert svc.cache.stats.compiles == compiles0, (
+            "first compacted request compiled — warmup missed a stage signature"
+        )
+        assert engine_jit_cache_size() == jit0, "implicit jit path compiled"
+        for res, m in zip(results, mats):
+            want = cluster(m, cfg.method, backend="serial")
+            np.testing.assert_array_equal(res.merges, want.merges)
+
+
 def test_batcher_matches_single_problem_with_knobs(rng):
     cfg = ServiceConfig(
         method="average",
