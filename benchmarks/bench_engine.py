@@ -57,14 +57,17 @@ def main(n: int = 512, B: int = 32, smoke: bool = False) -> dict:
         x = rng.normal(size=(nb, 8)).astype(np.float32)
         mats.append(np.sqrt(((x[:, None] - x[None]) ** 2).sum(-1)))
 
-    full = cluster(D, "complete", backend="serial")
+    # algorithm="lw" pinned throughout: this bench measures the LW merge
+    # loop's knob matrix (the nnchain engine has its own bench and would
+    # hijack the default algorithm="auto" at these sizes)
+    full = cluster(D, "complete", backend="serial", algorithm="lw")
     base = np.asarray(full.merges)
     stop_k = max(2, n // 16)
     thr = float(np.median(base[:, 2]))
     times: dict[str, float] = {}
 
     def run_serial(**kw):
-        res = cluster(D, "complete", backend="serial", **kw)
+        res = cluster(D, "complete", backend="serial", algorithm="lw", **kw)
         jax.block_until_ready(res.merges)
         return res
 
@@ -83,7 +86,8 @@ def main(n: int = 512, B: int = 32, smoke: bool = False) -> dict:
     times["serial_thr"] = _timed(
         lambda: run_serial(distance_threshold=thr))
 
-    want = [np.asarray(cluster(m, "complete", backend="serial").merges)
+    want = [np.asarray(cluster(m, "complete", backend="serial",
+                               algorithm="lw").merges)
             for m in mats]
     for variant in ("baseline", "rowmin"):
         got = cluster_batch(mats, "complete", backend="serial", variant=variant)
@@ -131,7 +135,7 @@ def main_compaction(n: int = 512, B: int = 32, smoke: bool = False) -> dict:
     times: dict[str, float] = {}
 
     def run_serial(**kw):
-        res = cluster(D, "complete", backend="serial", **kw)
+        res = cluster(D, "complete", backend="serial", algorithm="lw", **kw)
         jax.block_until_ready(res.merges)
         return res
 

@@ -1,0 +1,144 @@
+"""NN-chain vs Lance-Williams: the O(n²)-vs-O(n³) crossover, measured.
+
+Two claims from DESIGN.md §11, each verified *in the same run* that
+times it (EXPERIMENTS.md §Perf-5):
+
+* **Crossover sweep** — complete linkage over an n sweep, the compacted
+  fused LW serial loop (`cluster(algorithm="lw")`, `compaction="auto"`)
+  against the NN-chain engine (`cluster(algorithm="nnchain")`).  Every
+  timed pair is first checked dendrogram-equivalent
+  (`dendrogram.merges_equivalent` + exact slot indices).  The headline
+  gate — nnchain ≥ 3× LW at n = 2048 — is the acceptance criterion of
+  the nnchain PR and asserts whenever the sweep reaches that size
+  (``--smoke`` stays small for CI).
+* **Matrix-free points mode** — ward at n = 16384, d = 32: the compiled
+  program must contain NO (n, n) intermediate, asserted by scanning the
+  optimized HLO for an ``f32[n,n]`` shape (not hoped from reading the
+  source — the compiler is the authority on what gets allocated), plus
+  the XLA memory-analysis peak when the backend reports one.
+
+Output follows the repo's ``name,us_per_call,derived`` CSV convention.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _timed(fn, reps: int = 3) -> float:
+    fn()                                    # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def main(n: int = 2048, smoke: bool = False) -> dict:
+    import jax
+
+    from repro.core import cluster
+    from repro.core import dendrogram as dg
+
+    ns = (
+        (32, 64, 96) if smoke
+        else tuple(s for s in (64, 128, 256, 512, 1024) if s < n) + (n,)
+    )
+    rng = np.random.default_rng(0)
+    times: dict[str, float] = {}
+    ratios: dict[int, float] = {}
+
+    for ni in ns:
+        X = rng.normal(size=(ni, 8)).astype(np.float32)
+
+        def run(alg, ni=ni, X=X):
+            # backend pinned: on a multi-device host "auto" would hand the
+            # LW side the distributed engine and the gate would compare
+            # against the wrong loop (bench_engine pins it for the same
+            # reason)
+            res = cluster(X, "complete", algorithm=alg, backend="serial",
+                          keep_inputs=False)
+            np.asarray(res.merges)
+            return res
+
+        lw = run("lw")
+        nn = run("nnchain")
+        # equivalence BEFORE timing — a wrong chain must fail the bench,
+        # not print a fast lie
+        got, want = np.asarray(nn.merges), np.asarray(lw.merges)
+        assert np.array_equal(got[:, [0, 1, 3]], want[:, [0, 1, 3]]), ni
+        assert dg.merges_equivalent(got, want, n=ni), ni
+
+        reps = 3 if ni <= 512 else 1
+        times[f"lw_n{ni}"] = _timed(lambda: run("lw"), reps)
+        times[f"nn_n{ni}"] = _timed(lambda: run("nnchain"), reps)
+        ratios[ni] = times[f"lw_n{ni}"] / times[f"nn_n{ni}"]
+
+    # ---- matrix-free points mode: no (n, n) allocation, by construction
+    # AND by compiled-HLO inspection -------------------------------------
+    np_pts, d_pts = (2048, 16) if smoke else (16384, 32)
+    Xp = rng.normal(size=(np_pts, d_pts)).astype(np.float32)
+
+    from repro.core.nnchain import _run_points
+
+    kwargs = dict(method="ward", n_steps=np_pts - 1, use_pallas=False,
+                  block_n=512, interpret=False)
+    lowered = _run_points.lower(
+        jax.numpy.asarray(Xp), jax.numpy.ones((np_pts,), bool), **kwargs
+    )
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    banned = f"[{np_pts},{np_pts}]"
+    assert banned not in hlo, (
+        f"matrix-free points mode compiled an {banned} intermediate"
+    )
+    peak = ""
+    try:
+        ma = compiled.memory_analysis()
+        peak_bytes = ma.temp_size_in_bytes + ma.argument_size_in_bytes
+        peak = f";peak_mb={peak_bytes / 2**20:.1f}"
+    except Exception:  # noqa: BLE001 — memory analysis is backend-optional
+        pass
+
+    def run_points():
+        res = cluster(Xp, "ward", algorithm="nnchain", matrix_free=True,
+                      keep_inputs=False)
+        np.asarray(res.merges)
+        return res
+
+    res = run_points()
+    assert res.merges.shape == (np_pts - 1, 4)
+    times[f"points_ward_n{np_pts}"] = _timed(run_points, reps=1)
+
+    print("name,us_per_call,derived")
+    for ni in ns:
+        print(f"nnchain_lw_n{ni},{times[f'lw_n{ni}'] * 1e6:.0f},lw_serial")
+        print(f"nnchain_nn_n{ni},{times[f'nn_n{ni}'] * 1e6:.0f},"
+              f"{ratios[ni]:.2f}x_vs_lw")
+    dense_mb = np_pts * np_pts * 4 / 2**20
+    print(f"nnchain_points_ward_n{np_pts},"
+          f"{times[f'points_ward_n{np_pts}'] * 1e6:.0f},"
+          f"d={d_pts};no_nxn_alloc_hlo_checked;dense_would_be_"
+          f"{dense_mb:.0f}mb{peak}")
+    crossover = min((ni for ni, r in ratios.items() if r >= 1.0),
+                    default=None)
+    print(f"nnchain_config,{max(ns)},smoke={int(smoke)};"
+          f"crossover_n={crossover};all_outputs_verified")
+    if max(ns) >= 2048:
+        assert ratios[max(ns)] >= 3.0, (
+            f"nnchain must be >=3x the compacted LW loop at n={max(ns)}, "
+            f"got {ratios[max(ns)]:.2f}x"
+        )
+    return times
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes; verifies the sweep still runs")
+    a = ap.parse_args()
+    main(n=a.n, smoke=a.smoke)

@@ -7,6 +7,7 @@ Paper artifact → bench mapping:
   Table 1 (all linkage methods)        → bench_linkage
   beyond-paper engine (rowmin)         → bench_variants
   unified engine variant×early-stop    → bench_engine
+  O(n²) nnchain engine + points mode   → bench_nnchain (EXPERIMENTS §Perf-5)
   kernel hot-spots                     → bench_kernels
   batched multi-problem engine         → bench_batch (EXPERIMENTS.md §Batch)
   online serving layer (DESIGN.md §10) → bench_service (EXPERIMENTS.md §Service)
@@ -90,6 +91,7 @@ def main() -> None:
         bench_engine,
         bench_kernels,
         bench_linkage,
+        bench_nnchain,
         bench_scaling,
         bench_service,
         bench_storage,
@@ -109,6 +111,7 @@ def main() -> None:
             n=512 if not args.paper else 1968, B=32, smoke=smoke),
         "compaction": lambda: bench_engine.main_compaction(
             n=512 if not args.paper else 1968, B=32, smoke=smoke),
+        "nnchain": lambda: bench_nnchain.main(n=2048, smoke=smoke),
         "batch": lambda: bench_batch.main(
             B=64 if not smoke else 8, n=128 if not args.paper else 256,
             compaction=True),

@@ -17,9 +17,17 @@ from repro.core.batched import (
 from repro.core.engine import VARIANTS, plan_stages, resolve_compaction
 from repro.core.lance_williams import LWResult, lance_williams, lance_williams_from_points
 from repro.core.linkage import METHODS, coefficients, default_metric, update_row
+from repro.core.nnchain import (
+    POINTS_METHODS,
+    REDUCIBLE_METHODS,
+    nn_chain,
+    nn_chain_from_points,
+)
 
 __all__ = [
     "METHODS",
+    "POINTS_METHODS",
+    "REDUCIBLE_METHODS",
     "VARIANTS",
     "BatchResult",
     "BatchStats",
@@ -35,6 +43,8 @@ __all__ = [
     "default_metric",
     "lance_williams",
     "lance_williams_from_points",
+    "nn_chain",
+    "nn_chain_from_points",
     "plan_stages",
     "resolve_compaction",
     "update_row",

@@ -2,18 +2,20 @@
 
 ``cluster(...)`` accepts either raw points (``(n, d)`` embeddings or
 ``(n, atoms, 3)`` conformations) or a pre-built ``(n, n)`` distance matrix,
-picks an engine (serial / distributed / Pallas-kernel inner loops) and
-returns a :class:`ClusterResult` with the merge list, a scipy-style linkage
-matrix and a label extractor — the paper's dendrogram, cut at any level.
+picks an algorithm (the O(n³)-work Lance-Williams merge loop or the
+O(n²) NN-chain engine) and an execution backend (serial / distributed /
+Pallas-kernel inner loops), and returns a :class:`ClusterResult` with
+the merge list, a scipy-style linkage matrix and a label extractor —
+the paper's dendrogram, cut at any level.
 
-Every backend is a composition of the unified merge loop
-(:mod:`repro.core.engine`), so the engine-level knobs are uniform:
-``variant`` selects the argmin primitive (``baseline`` / ``rowmin`` /
-``lazy``) and ``stop_at_k`` / ``distance_threshold`` terminate the loop
-early — at ``k`` remaining clusters (statically fewer loop trips) and/or
-before the first merge whose distance exceeds the threshold.  An
-early-stopped result carries the exact prefix of the full run's merge
-list.
+The docstring of :func:`cluster` is the single reference for how the
+engine knobs (``algorithm`` / ``backend`` / ``variant`` /
+``compaction`` / ``stop_at_k`` / ``distance_threshold`` /
+``matrix_free``) compose; the per-backend entry points
+(:func:`repro.core.lance_williams.lance_williams`,
+:func:`repro.kernels.ops.lance_williams_kernelized`,
+:func:`repro.core.nnchain.nn_chain`, …) defer here rather than
+re-documenting the matrix.
 """
 
 from __future__ import annotations
@@ -30,8 +32,15 @@ from repro.core.batched import BatchStats, cluster_batch_merges
 from repro.core.distance import pairwise_euclidean, pairwise_rmsd, pairwise_sq_euclidean
 from repro.core.lance_williams import lance_williams
 from repro.core.linkage import METHODS, default_metric
+from repro.core.nnchain import (
+    nn_chain,
+    nn_chain_from_points,
+    resolve_algorithm,
+    resolve_matrix_free,
+)
 
 Backend = Literal["auto", "serial", "distributed", "kernel"]
+Algorithm = Literal["auto", "lw", "nnchain"]
 
 
 @dataclass
@@ -39,6 +48,7 @@ class ClusterResult:
     merges: np.ndarray                 # (n_merges, 4) slot-convention merge list
     method: str
     backend: str
+    algorithm: str = "lw"              # merge engine: "lw" | "nnchain"
     n_leaves: int | None = None        # explicit n for early-stopped runs
     # original points, when the input was points (enables centroids/assign)
     points: np.ndarray | None = field(default=None, repr=False)
@@ -129,7 +139,8 @@ def build_distance_matrix(X, metric: str = "euclidean") -> jax.Array:
 
 
 def _interpret_input(data, method: str, metric: str | None,
-                     is_distance: bool | None = None):
+                     is_distance: bool | None = None, *,
+                     materialize: bool = True):
     """Shared input interpretation for ``cluster``, ``cluster_batch`` and
     the service batcher: a square 2-D array with ``metric is None`` is
     treated as a pre-built distance matrix; anything else is points
@@ -146,7 +157,10 @@ def _interpret_input(data, method: str, metric: str | None,
     Returns ``(D, points, metric_used)`` — ``points``/``metric_used`` are
     ``None`` for matrix input.  ``D`` may be a jax array (built matrices
     stay on device for the single-problem engines); batch callers convert
-    to numpy for host-side bucket stacking."""
+    to numpy for host-side bucket stacking.  With ``materialize=False``
+    the classification runs but the O(n²) matrix build for points input
+    is *deferred* (``D`` comes back ``None``) — the matrix-free NN-chain
+    path must decide before any ``(n, n)`` array exists."""
     arr = np.asarray(data)
     looks_square = arr.ndim == 2 and arr.shape[0] == arr.shape[1]
     if is_distance is None:
@@ -182,7 +196,28 @@ def _interpret_input(data, method: str, metric: str | None,
         return arr, None, None
     if metric is None:
         metric = default_metric(method)
+    if not materialize:
+        return None, arr, metric
     return build_distance_matrix(arr, metric), arr, metric
+
+
+def _truncate_canonical(
+    merges: np.ndarray, n: int, stop_at_k: int,
+    distance_threshold: float | None,
+) -> np.ndarray:
+    """Apply the LW loop's early-stop semantics to a *canonical* (height-
+    sorted) full merge list: keep the first ``n − stop_at_k`` rows, then
+    drop everything from the first merge above the threshold on.  The
+    row count comes from the same :func:`repro.core.engine.resolve_n_steps`
+    the LW loop trips on — one source of truth for the prefix contract."""
+    from repro.core.engine import resolve_n_steps
+
+    merges = merges[: resolve_n_steps(n, stop_at_k)]
+    if distance_threshold is not None:
+        above = merges[:, 2] > distance_threshold
+        if above.any():
+            merges = merges[: int(np.argmax(above))]
+    return merges
 
 
 def cluster(
@@ -191,74 +226,201 @@ def cluster(
     *,
     metric: str | None = None,
     is_distance: bool | None = None,
+    algorithm: Algorithm = "auto",
     backend: Backend = "auto",
     mesh=None,
     variant: str = "baseline",
     stop_at_k: int = 1,
     distance_threshold: float | None = None,
     compaction: bool | str = "auto",
+    matrix_free: bool | str = "auto",
     keep_inputs: bool = True,
 ) -> ClusterResult:
-    """Hierarchically cluster *data* with the Lance-Williams engine.
+    """Hierarchically cluster *data* — THE reference for the engine knobs.
 
-    data: ``(n, n)`` distance matrix (if square & ``metric is None``), or
-        ``(n, d)`` points / ``(n, atoms, 3)`` conformations with a metric.
-    is_distance: explicit disambiguation of the square-input case —
-        ``True`` forces the distance-matrix reading, ``False`` forces the
-        points reading; ``None`` keeps the shape heuristic (which warns
-        on a non-symmetric square array).
-    backend: ``serial`` (single device), ``distributed`` (paper's algorithm
-        over all mesh devices), ``kernel`` (serial loop with Pallas inner
-        ops), or ``auto`` (distributed iff >1 device).
-    variant / stop_at_k / distance_threshold: engine-level knobs shared
-        by every backend — argmin primitive and early termination.
-    compaction: engine-level stage schedule (DESIGN.md §3) — pack live
-        rows into a half-size matrix each time the live count halves;
-        merges are unchanged (bit-identical on jnp backends), the dense
-        work drops to ~0.57×.  ``"auto"`` (default) enables it whenever
-        the plan has more than one stage; pass ``False`` to pin the
-        single-stage loop (tiny problems gain nothing from staging).
-    keep_inputs: store the input points/distance matrix on the result
-        (enables ``exemplars``/``centroids`` and the streaming-assignment
-        export).  Pass ``False`` when accumulating many results — the
-        pinned ``(n, n)`` matrix is O(n²) per result.
+    Every entry point (this function, :func:`cluster_batch`, the service,
+    and the per-backend functions they wrap) takes some subset of the
+    knobs below; this docstring is the one place their interactions are
+    specified.
+
+    **Input** — ``data`` is an ``(n, n)`` distance matrix when square and
+    ``metric is None``, else ``(n, d)`` points / ``(n, atoms, 3)``
+    conformations embedded via ``metric`` (default:
+    :func:`repro.core.linkage.default_metric` — squared Euclidean for
+    the geometric methods, plain Euclidean otherwise, scipy's
+    convention).  ``is_distance=True/False`` disambiguates the square
+    points-vs-matrix case explicitly; leaving it ``None`` keeps the
+    shape heuristic, which warns on a non-symmetric square array.
+
+    **algorithm** — which merge engine computes the dendrogram:
+
+    * ``"lw"``: the paper's Lance-Williams merge loop
+      (:mod:`repro.core.engine`) — O(n²) work *per merge*; the only
+      engine for centroid/median (non-reducible) and the only one the
+      ``backend``/``variant``/``compaction`` execution knobs apply to.
+    * ``"nnchain"``: the nearest-neighbor-chain engine
+      (:mod:`repro.core.nnchain`, DESIGN.md §11) — exact for the
+      reducible methods (single/complete/average/weighted/ward) at
+      O(n²) *total* work.  Single-device; merges are canonicalized to
+      height order (:func:`repro.core.dendrogram.canonical_order`), so
+      the result matches the LW engine's on tie-free input.
+    * ``"auto"`` (default): nnchain for large reducible problems on the
+      serial path (``n ≥`` :data:`repro.core.nnchain.NNCHAIN_AUTO_MIN_N`
+      with default ``variant``/``compaction``), LW otherwise —
+      batched/service traffic and the distributed/kernel backends always
+      keep LW.  Caveat: on input with *exactly tied* distances (common
+      for quantized or duplicated embeddings) the two engines may break
+      ties differently and return a different — equally valid —
+      dendrogram; pin ``algorithm="lw"`` where bit-compatibility with
+      the LW loop's row-major tie-breaking matters.
+
+    **backend** (LW only) — execution wrapper: ``serial`` (one device),
+    ``distributed`` (paper's row-sharded algorithm over the mesh),
+    ``kernel`` (Pallas inner ops), ``auto`` (distributed iff >1 device).
+
+    **variant** (LW only) — argmin primitive on any backend:
+    ``baseline`` (full masked scan), ``rowmin`` (cached row minima),
+    ``lazy`` (cached minima + bounded dirty-row drain).  Bit-identical
+    outputs; pick on measured speed.
+
+    **compaction** (LW only, any backend) — stage schedule (DESIGN.md
+    §3): pack live rows into a half-size matrix each time the live count
+    halves; merges unchanged, dense work ~0.57×.  ``"auto"`` (default)
+    stages whenever the plan has >1 stage.  The nnchain engine has no
+    dead-row traffic to compact — the knob is ignored there, and an
+    *explicitly* set value steers ``algorithm="auto"`` back to LW (the
+    knob names an LW execution schedule).
+
+    **stop_at_k / distance_threshold** (any algorithm, any backend) —
+    early termination, composable: stop at ``k`` remaining clusters
+    and/or before the first merge above the threshold.  On LW these
+    genuinely shorten the loop (static trip shrink / while-loop exit);
+    on nnchain the full agglomeration is O(n²) anyway, so the engine
+    runs it and truncates the canonical prefix — the same prefix
+    contract either way, and ``labels(k)`` works down to the stop
+    level.  One boundary caveat: the engines' heights agree only to
+    float tolerance, so a ``distance_threshold`` sitting *exactly on* a
+    merge height may include/exclude that borderline merge differently
+    across algorithms — thresholds between merge heights behave
+    identically.
+
+    **matrix_free** (nnchain capability) — ``"auto"`` (default) drops
+    the ``(n, n)`` matrix entirely for large ``(n, d)`` points input
+    with a geometric-summary method (ward by default; average/weighted
+    under an explicit ``metric="sqeuclidean"``), keeping peak memory
+    O(n·d + n); ``True`` forces it — ``algorithm="auto"`` then resolves
+    to nnchain regardless of size, ``algorithm="lw"`` is an error, and
+    an input/method that cannot support it raises rather than silently
+    building the matrix; ``False`` pins the dense chain loop.  A
+    matrix-free result stores
+    no ``distances`` (``exemplars()`` would rebuild O(n²) on the host —
+    it stays available, just not free).
+
+    **keep_inputs** — store the input points/distance matrix on the
+    result (enables ``exemplars``/``centroids`` and the
+    streaming-assignment export).  Pass ``False`` when accumulating many
+    results; the pinned ``(n, n)`` matrix is O(n²) per result.
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
 
-    D, points, used_metric = _interpret_input(data, method, metric, is_distance)
-    n = int(D.shape[0])
+    D, points, used_metric = _interpret_input(
+        data, method, metric, is_distance, materialize=False
+    )
+    n = int((D if points is None else points).shape[0])
+
+    if matrix_free not in (True, False, None, "auto"):
+        # validate up front — the LW branch never consults matrix_free, so
+        # without this a typo'd value would only error once n grows past
+        # the nnchain auto threshold
+        raise ValueError(
+            f"matrix_free must be a bool or 'auto', got {matrix_free!r}"
+        )
+    if matrix_free not in (None, "auto"):
+        matrix_free = bool(matrix_free)   # membership passed 0/1: same as bool
+    if matrix_free is True:
+        # matrix-free is an nnchain capability: an explicit request makes
+        # "auto" mean nnchain, and an explicit "lw" is a contradiction —
+        # never silently build the (n, n) matrix the caller opted out of
+        if algorithm == "lw":
+            raise ValueError(
+                "matrix_free=True requires the NN-chain engine, but "
+                "algorithm='lw' pins the Lance-Williams loop (every LW "
+                "backend stores the dense matrix)"
+            )
+        algorithm = "nnchain"
 
     if backend == "auto":
-        backend = "distributed" if len(jax.devices()) > 1 else "serial"
-
-    stops = dict(stop_at_k=stop_at_k, distance_threshold=distance_threshold,
-                 compaction=compaction)
-    if backend == "serial":
-        res = lance_williams(D, method=method, variant=variant, **stops)
-    elif backend == "distributed":
-        from repro.core.distributed import distributed_lance_williams
-
-        res = distributed_lance_williams(
-            D, method=method, mesh=mesh, variant=variant, **stops
+        # an explicit nnchain request owns the backend choice: it is a
+        # single-device engine, so "auto" must not hand it a multi-device
+        # mesh it would then have to reject
+        backend = (
+            "serial" if algorithm == "nnchain"
+            else "distributed" if len(jax.devices()) > 1
+            else "serial"
         )
-    elif backend == "kernel":
-        from repro.kernels.ops import lance_williams_kernelized
 
-        res = lance_williams_kernelized(
-            jax.numpy.asarray(D), method=method, variant=variant, **stops
+    algorithm = resolve_algorithm(
+        algorithm, method=method, backend=backend, n=n,
+        variant=variant, compaction=compaction,
+    )
+
+    if algorithm == "nnchain":
+        use_points = resolve_matrix_free(
+            matrix_free,
+            points_shape=None if points is None else points.shape,
+            method=method, metric=used_metric, n=n,
         )
+        if use_points:
+            res = nn_chain_from_points(points, method)
+            D = None                    # never materialized — keep it that way
+        else:
+            if points is not None:
+                D = build_distance_matrix(points, used_metric)
+            res = nn_chain(D, method)
+        if n > 1 and int(res.n_merges) != n - 1:
+            raise RuntimeError(
+                "NN-chain loop hit its iteration cap before finishing — "
+                "the input likely contains NaNs (the chain invariant "
+                "needs a total order on distances)"
+            )
+        merges = _truncate_canonical(
+            dg.canonical_order(np.asarray(res.merges), n=n),
+            n, stop_at_k, distance_threshold,
+        )
+        backend = "serial"
     else:
-        raise ValueError(f"unknown backend {backend!r}")
+        if points is not None:
+            D = build_distance_matrix(points, used_metric)
+        stops = dict(stop_at_k=stop_at_k,
+                     distance_threshold=distance_threshold,
+                     compaction=compaction)
+        if backend == "serial":
+            res = lance_williams(D, method=method, variant=variant, **stops)
+        elif backend == "distributed":
+            from repro.core.distributed import distributed_lance_williams
 
-    merges = np.asarray(res.merges)[: int(res.n_merges)]
+            res = distributed_lance_williams(
+                D, method=method, mesh=mesh, variant=variant, **stops
+            )
+        elif backend == "kernel":
+            from repro.kernels.ops import lance_williams_kernelized
+
+            res = lance_williams_kernelized(
+                jax.numpy.asarray(D), method=method, variant=variant, **stops
+            )
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        merges = np.asarray(res.merges)[: int(res.n_merges)]
+
     return ClusterResult(
         merges=merges,
         method=method,
         backend=backend,
+        algorithm=algorithm,
         n_leaves=n,
         points=points if keep_inputs else None,
-        distances=D if keep_inputs else None,
+        distances=D if (keep_inputs and D is not None) else None,
         metric=used_metric,
     )
 
@@ -342,6 +504,12 @@ def cluster_batch(
     and the streaming-assignment export).  Off by default: a large batch
     would otherwise pin O(Σ n_b²) matrix memory for the life of the
     result list.
+
+    There is deliberately no ``algorithm=`` knob here: batched (and
+    service) problems are small-n by construction and run in lockstep
+    lanes, which is the LW engine's regime — the NN-chain engine's
+    data-dependent chain loop cannot share a vmap lane schedule (see
+    :func:`cluster` and DESIGN.md §11 for when nnchain wins).
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")

@@ -114,6 +114,101 @@ def cut_exemplars(
     return labels, exemplars
 
 
+def canonical_order(
+    merges: np.ndarray,
+    n: int | None = None,
+    *,
+    rtol: float = 1e-5,
+    atol: float = 1e-7,
+) -> np.ndarray:
+    """Rewrite a merge list into canonical (non-decreasing height) order.
+
+    The NN-chain engine (:mod:`repro.core.nnchain`) emits merges in
+    *chain* order; a **stable** sort by height produces exactly the
+    sequence the LW loop emits for the same (tie-free) input — same
+    slot pairs (a cluster's slot is the minimum leaf index of its
+    members in both engines), heights to float tolerance — because for
+    reducible methods a child merge never has a greater height than its
+    parent, so the stable sort keeps every dependent pair in dependency
+    order.
+
+    Reducibility is exact in real arithmetic but only *approximate* in
+    float32: duplicated/quantized points can give a parent merge a
+    height one ulp **below** its child's (observed: parent 0.99999976
+    under child 1.0 on 4× duplicated points), and a naive sort would
+    then order the parent first and corrupt the tree.  So heights are
+    first **dependency-clamped**: scanning in emission order, a merge
+    whose height falls below the clusters it consumes by at most the
+    ``rtol``/``atol`` float-noise budget is lifted to that height
+    (within the engines' documented height tolerance); a drop *beyond*
+    the budget is a genuine inversion (non-reducible input) and is left
+    for :func:`validate_merges` to reject after the sort.  Already
+    height-sorted input (every LW engine's output) passes through
+    unchanged.
+    """
+    merges = np.array(merges, copy=True)         # input dtype preserved
+    n = _leaf_count(merges, n)
+    heights = merges[:, 2]
+    floor = np.zeros(n, heights.dtype)  # height of the slot's current cluster
+    for t in range(merges.shape[0]):
+        i, j = int(round(merges[t, 0])), int(round(merges[t, 1]))
+        need = max(floor[i], floor[j])
+        if heights[t] < need and heights[t] >= need - (atol + rtol * abs(need)):
+            heights[t] = need    # float noise, not a real inversion
+        floor[i] = heights[t]
+    order = np.argsort(heights, kind="stable")
+    out = merges[order]
+    validate_merges(out, n=n)
+    return out
+
+
+def merge_leafsets(merges: np.ndarray, n: int | None = None) -> list[frozenset]:
+    """Leaf members of the cluster each merge creates, in merge order.
+
+    The clusters of a dendrogram form a laminar family, so each merge's
+    leafset is unique — the list doubles as a canonical identity for
+    order-insensitive comparison (:func:`merges_equivalent`).
+    """
+    merges = np.asarray(merges)
+    n = _leaf_count(merges, n)
+    members: list[set] = [{a} for a in range(n)]
+    out: list[frozenset] = []
+    for t in range(merges.shape[0]):
+        i, j = int(round(merges[t, 0])), int(round(merges[t, 1]))
+        members[i] = members[i] | members[j]
+        out.append(frozenset(members[i]))
+    return out
+
+
+def merges_equivalent(
+    a: np.ndarray,
+    b: np.ndarray,
+    n: int | None = None,
+    *,
+    rtol: float = 1e-4,
+    atol: float = 1e-5,
+) -> bool:
+    """True iff two merge lists describe the same dendrogram.
+
+    Order-insensitive: each list is reduced to its set of created
+    clusters (leafsets) with attached heights; the lists are equivalent
+    when the cluster sets coincide and per-cluster heights agree to
+    tolerance.  This is the cross-engine contract the NN-chain goldens
+    assert (``tests/test_nnchain.py``, ``benchmarks/bench_nnchain.py``) —
+    robust to both merge reordering and float-level height differences.
+    """
+    a, b = np.asarray(a), np.asarray(b)
+    if a.shape != b.shape:
+        return False
+    ha = dict(zip(merge_leafsets(a, n), a[:, 2]))
+    hb = dict(zip(merge_leafsets(b, n), b[:, 2]))
+    if set(ha) != set(hb):
+        return False
+    va = np.array([ha[k] for k in sorted(ha, key=sorted)])
+    vb = np.array([hb[k] for k in sorted(hb, key=sorted)])
+    return bool(np.allclose(va, vb, rtol=rtol, atol=atol))
+
+
 def merge_heights(merges: np.ndarray) -> np.ndarray:
     return np.asarray(merges)[:, 2]
 

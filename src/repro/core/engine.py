@@ -36,6 +36,17 @@ Early termination is an engine-level feature every backend inherits:
 ``stop_at_k`` statically shrinks the trip count to ``n - k`` merges, and
 ``distance_threshold`` switches the trip loop to a ``while_loop`` that
 exits before the first merge whose distance exceeds the threshold.
+(How these knobs compose with ``variant``/``compaction``/``algorithm``
+across entry points is specified once, in
+:func:`repro.core.api.cluster`'s docstring.)
+
+This loop does O(n²) work **per merge** (O(n³) per run; compaction
+shaves the constant).  For the reducible linkage methods the NN-chain
+engine (:mod:`repro.core.nnchain`, DESIGN.md §11) reaches the identical
+dendrogram in O(n²) *total* — ``cluster(algorithm="auto")`` picks it
+for large serial problems; this loop remains the engine for
+centroid/median, for the distributed/kernel/batched execution wrappers,
+and for every ``variant``/``compaction`` configuration.
 
 **Compaction schedule** (DESIGN.md §3).  The static-shape loop touches
 the full dense matrix every trip, so after ``n/2`` merges half of every

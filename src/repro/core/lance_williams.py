@@ -74,15 +74,11 @@ def lance_williams(
 
     ``method`` is one of :data:`repro.core.linkage.METHODS` (complete
     linkage is the paper's experimental configuration); ``variant`` picks
-    the argmin primitive (:data:`repro.core.engine.VARIANTS`).
-    ``stop_at_k`` / ``distance_threshold`` stop the merge loop early: at
-    ``k`` remaining clusters (statically fewer trips) and/or before the
-    first merge whose distance exceeds the threshold.  ``compaction``
-    enables the engine's stage schedule (live rows packed into a
-    half-size matrix each time the live count halves — bit-identical
-    merges, ~0.57× the dense work); ``"auto"`` turns it on whenever the
-    plan has more than one stage, i.e. for problems past the first
-    boundary (``n >= 2 *`` :data:`repro.core.engine.MIN_STAGE_N`).
+    the argmin primitive (:data:`repro.core.engine.VARIANTS`),
+    ``stop_at_k`` / ``distance_threshold`` terminate early, and
+    ``compaction`` enables the stage schedule — the full knob matrix and
+    its interactions are documented once, in
+    :func:`repro.core.api.cluster`.
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")

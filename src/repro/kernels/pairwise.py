@@ -73,3 +73,50 @@ def pairwise_sq_euclidean_pallas(
 pairwise_sq_euclidean_pallas_jit = functools.partial(
     jax.jit, static_argnames=("block_m", "block_n", "interpret")
 )(pairwise_sq_euclidean_pallas)
+
+
+def _row_kernel(x_ref, y_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)          # (1, d) — the chain tip
+    y = y_ref[...].astype(jnp.float32)          # (bn, d) — a points tile
+    xx = jnp.sum(x * x)
+    yy = jnp.sum(y * y, axis=1)                 # (bn,)
+    g = jax.lax.dot_general(
+        x, y,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                           # (1, bn) on the MXU
+    out_ref[...] = jnp.maximum(xx + yy[None, :] - 2.0 * g, 0.0)
+
+
+def row_sq_euclidean_pallas(
+    x: jax.Array,
+    Y: jax.Array,
+    *,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """``(d,) × (m, d) → (m,)`` squared distances — ONE row, tile-by-tile.
+
+    The matrix-free NN-chain points mode (DESIGN.md §11) calls this once
+    per chain extension: the candidate row against the whole summary
+    array streams through VMEM in ``(block_n, d)`` tiles and the full
+    ``(m, m)`` matrix is never formed anywhere.  Inputs must already be
+    padded (``m % block_n == 0``, ``d`` a multiple of 128 — the
+    ``nn_chain_from_points`` wrapper pads once, up front).
+    """
+    m, d = Y.shape
+    assert x.shape == (d,) and m % block_n == 0 and d % 128 == 0, (
+        x.shape, Y.shape, block_n,
+    )
+    out = pl.pallas_call(
+        _row_kernel,
+        grid=(m // block_n,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.float32),
+        interpret=interpret,
+    )(x[None, :], Y)
+    return out[0]

@@ -68,3 +68,65 @@ def test_validate_merges_catches_corruption(rng):
     bad[1, 1] = bad[1, 0]
     with pytest.raises(AssertionError):
         dg.validate_merges(bad)
+
+
+# ---------------------------------------------------------------------------
+# canonical ordering + cross-engine equivalence (the NN-chain contract)
+# ---------------------------------------------------------------------------
+
+
+def test_canonical_order_identity_on_sorted(rng):
+    """Every LW engine's output is already canonical — a fixed point."""
+    m = _merges(rng)
+    assert np.array_equal(dg.canonical_order(m), m)
+
+
+def test_canonical_order_restores_shuffled_independent_merges(rng):
+    """Chain-order output (height-shuffled, dependencies respected)
+    canonicalizes back to the height-sorted list."""
+    m = _merges(rng, n=16)
+    # shuffle only *independent* adjacent pairs (no shared slots) — a
+    # conservative stand-in for chain order
+    shuffled = m.copy()
+    for t in range(0, m.shape[0] - 1, 2):
+        if not set(m[t, :2]) & set(m[t + 1, :2]):
+            shuffled[[t, t + 1]] = shuffled[[t + 1, t]]
+    out = dg.canonical_order(shuffled)
+    assert np.array_equal(out, m)
+    dg.validate_merges(out)
+
+
+def test_canonical_order_rejects_dependency_breaking_input(rng):
+    """An inversion that would reorder a merge before the merge that
+    created its operand must raise, not corrupt the tree."""
+    m = _merges(rng, n=8)
+    bad = m.copy()
+    bad[-1, 2] = -1.0        # parent of everything sorted to the front
+    with pytest.raises(AssertionError):
+        dg.canonical_order(bad)
+
+
+def test_merge_leafsets_laminar(rng):
+    m = _merges(rng, n=12)
+    sets = dg.merge_leafsets(m)
+    assert len(set(sets)) == len(sets)               # all distinct
+    assert sets[-1] == frozenset(range(12))          # root holds everything
+    for a in sets:
+        for b in sets:
+            assert a <= b or b <= a or not (a & b)   # laminar family
+
+
+def test_merges_equivalent_detects_structure_and_heights(rng):
+    m = _merges(rng, n=14)
+    assert dg.merges_equivalent(m, m)
+    # reordered independent merges: still the same dendrogram
+    shuffled = m.copy()
+    if not set(m[0, :2]) & set(m[1, :2]):
+        shuffled[[0, 1]] = shuffled[[1, 0]]
+    assert dg.merges_equivalent(m, shuffled)
+    # a height perturbation beyond tolerance is NOT equivalent
+    bumped = m.copy()
+    bumped[3, 2] += 1.0
+    assert not dg.merges_equivalent(m, bumped)
+    # a truncated list is not equivalent (shape mismatch)
+    assert not dg.merges_equivalent(m, m[:-1], n=14)
