@@ -9,6 +9,15 @@ ZERO after warmup, and the bench **fails** (non-zero exit through
 ``run.py``) if they are not — the CI smoke step is a recompile
 regression gate, not just a timing readout.
 
+A second section A/Bs the batched NN-chain buckets (DESIGN.md §11)
+against the LW-bucket baseline on reducible ward *points* traffic
+(bucket 128 — where the matrix-free O(n·d) pad-waste argument bites):
+two identically-configured services, closed-loop saturation load, with
+per-lane dendrogram equivalence (``canonical_order`` semantics via
+``merges_equivalent``) asserted BEFORE timing.  The bench **fails** if
+the nnchain service does not clear ≥1.5x the LW req/s — the routing
+regression gate for ``algorithm="auto"``.
+
     PYTHONPATH=src python benchmarks/bench_service.py [--smoke] [--rate R]
 """
 
@@ -21,6 +30,65 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 for _p in (_ROOT, os.path.join(_ROOT, "src")):
     if _p not in sys.path:
         sys.path.insert(0, _p)
+
+
+#: A/B gate: nnchain buckets must clear this speedup over the LW-bucket
+#: baseline on reducible ward points traffic (measured: 4–7x at bucket
+#: 128 before submit-path matrix-build savings are counted).
+NNCHAIN_AB_GATE = 1.5
+
+
+def ab_nnchain_vs_lw(smoke: bool = False) -> tuple[float, float]:
+    """Closed-loop ward-points A/B: LW buckets vs matrix-free nnchain.
+
+    Returns ``(lw_rps, nnchain_rps)``.  Identical traffic, identical
+    batching policy; only ``algorithm``/``points_dim`` differ.  The LW
+    service builds each request's (n, n) matrix on the submit path —
+    part of the honest end-to-end cost the nnchain path never pays.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.core import cluster
+    from repro.core import dendrogram as dg
+    from repro.service.batcher import ClusteringService, ServiceConfig
+
+    rng = np.random.default_rng(0)
+    sizes, dim = (65, 80, 100, 128), 8
+    pool_n, reps = (16, 2) if smoke else (32, 5)
+    pool = [
+        rng.normal(size=(int(rng.choice(sizes)), dim)).astype(np.float32)
+        for _ in range(pool_n)
+    ]
+    rps = {}
+    for algo, pdim in (("lw", None), ("nnchain", dim)):
+        config = ServiceConfig(
+            method="ward", engine="serial", algorithm=algo, points_dim=pdim,
+            max_batch=8, max_delay_ms=1.0, bucket_ns=(128,),
+        )
+        with ClusteringService(config) as svc:
+            svc.warmup()
+            # per-lane dendrogram equivalence gate BEFORE any timing: both
+            # services must reproduce the serial LW tree per problem
+            for X, fut in zip(pool[:4], svc.submit_many(pool[:4])):
+                res = fut.result(timeout=600)
+                want = cluster(X, "ward", algorithm="lw", backend="serial")
+                if not dg.merges_equivalent(res.merges, want.merges,
+                                            n=X.shape[0]):
+                    raise RuntimeError(
+                        f"A/B equivalence gate failed: {algo} service "
+                        f"diverged from serial LW on n={X.shape[0]}"
+                    )
+            t0 = time.perf_counter()
+            served = 0
+            for _ in range(reps):
+                futures = svc.submit_many(pool)
+                for fut in futures:
+                    fut.result(timeout=600)
+                served += len(futures)
+            rps[algo] = served / (time.perf_counter() - t0)
+    return rps["lw"], rps["nnchain"]
 
 
 def main(rate: float = 300.0, duration: float = 3.0, smoke: bool = False):
@@ -68,6 +136,19 @@ def main(rate: float = 300.0, duration: float = 3.0, smoke: bool = False):
             "steady-state traffic compiled after warmup "
             f"(aot={report.steady_compiles}, jit={report.steady_jit_growth}) "
             "— the §10 zero-recompile invariant regressed"
+        )
+
+    lw_rps, nn_rps = ab_nnchain_vs_lw(smoke=smoke)
+    speedup = nn_rps / lw_rps if lw_rps else 0.0
+    print(f"service_ab_lw_ward_points,{1e6 / lw_rps:.0f},"
+          f"{lw_rps:.1f}req/s")
+    print(f"service_ab_nnchain_ward_points,{1e6 / nn_rps:.0f},"
+          f"{nn_rps:.1f}req/s;speedup={speedup:.2f}x")
+    if speedup < NNCHAIN_AB_GATE:
+        raise RuntimeError(
+            f"nnchain buckets {speedup:.2f}x vs LW baseline on reducible "
+            f"ward points traffic — below the {NNCHAIN_AB_GATE}x gate "
+            "(algorithm='auto' routing or the batched chain regressed)"
         )
     return report
 

@@ -28,14 +28,16 @@ import jax
 import numpy as np
 
 from repro.core import dendrogram as dg
-from repro.core.batched import BatchStats, cluster_batch_merges
+from repro.core.batched import BatchStats, bucket_n, cluster_batch_merges
 from repro.core.distance import pairwise_euclidean, pairwise_rmsd, pairwise_sq_euclidean
 from repro.core.lance_williams import lance_williams
 from repro.core.linkage import METHODS, default_metric
 from repro.core.nnchain import (
+    POINTS_METHODS,
     nn_chain,
     nn_chain_from_points,
     resolve_algorithm,
+    resolve_batch_algorithm,
     resolve_matrix_free,
 )
 
@@ -201,25 +203,6 @@ def _interpret_input(data, method: str, metric: str | None,
     return build_distance_matrix(arr, metric), arr, metric
 
 
-def _truncate_canonical(
-    merges: np.ndarray, n: int, stop_at_k: int,
-    distance_threshold: float | None,
-) -> np.ndarray:
-    """Apply the LW loop's early-stop semantics to a *canonical* (height-
-    sorted) full merge list: keep the first ``n − stop_at_k`` rows, then
-    drop everything from the first merge above the threshold on.  The
-    row count comes from the same :func:`repro.core.engine.resolve_n_steps`
-    the LW loop trips on — one source of truth for the prefix contract."""
-    from repro.core.engine import resolve_n_steps
-
-    merges = merges[: resolve_n_steps(n, stop_at_k)]
-    if distance_threshold is not None:
-        above = merges[:, 2] > distance_threshold
-        if above.any():
-            merges = merges[: int(np.argmax(above))]
-    return merges
-
-
 def cluster(
     data,
     method: str = "complete",
@@ -266,9 +249,12 @@ def cluster(
       the result matches the LW engine's on tie-free input.
     * ``"auto"`` (default): nnchain for large reducible problems on the
       serial path (``n ≥`` :data:`repro.core.nnchain.NNCHAIN_AUTO_MIN_N`
-      with default ``variant``/``compaction``), LW otherwise —
-      batched/service traffic and the distributed/kernel backends always
-      keep LW.  Caveat: on input with *exactly tied* distances (common
+      with default ``variant``/``compaction``), LW otherwise — the
+      distributed/kernel backends always keep LW, and batched/service
+      traffic keeps LW for dense buckets while routing *matrix-free*
+      points buckets of at least
+      :data:`repro.core.nnchain.NNCHAIN_BATCH_AUTO_MIN_N` to the batched
+      chain (see :func:`cluster_batch`).  Caveat: on input with *exactly tied* distances (common
       for quantized or duplicated embeddings) the two engines may break
       ties differently and return a different — equally valid —
       dendrogram; pin ``algorithm="lw"`` where bit-compatibility with
@@ -384,7 +370,7 @@ def cluster(
                 "the input likely contains NaNs (the chain invariant "
                 "needs a total order on distances)"
             )
-        merges = _truncate_canonical(
+        merges = dg.truncate_canonical(
             dg.canonical_order(np.asarray(res.merges), n=n),
             n, stop_at_k, distance_threshold,
         )
@@ -466,6 +452,7 @@ def cluster_batch(
     *,
     metric: str | None = None,
     is_distance: bool | None = None,
+    algorithm: Algorithm = "auto",
     backend: Backend = "auto",
     mesh=None,
     variant: str = "baseline",
@@ -505,23 +492,73 @@ def cluster_batch(
     would otherwise pin O(Σ n_b²) matrix memory for the life of the
     result list.
 
-    There is deliberately no ``algorithm=`` knob here: batched (and
-    service) problems are small-n by construction and run in lockstep
-    lanes, which is the LW engine's regime — the NN-chain engine's
-    data-dependent chain loop cannot share a vmap lane schedule (see
-    :func:`cluster` and DESIGN.md §11 for when nnchain wins).
+    ``algorithm`` picks the merge engine per shape *bucket* (engines:
+    see :func:`cluster`; routing:
+    :func:`repro.core.nnchain.resolve_batch_algorithm`).  ``"auto"``
+    (default) keeps dense buckets on LW — lockstep lanes are the LW
+    loop's regime, and the vmapped chain loop's per-lane gathers erase
+    its asymptotic edge on dense buckets — but routes *matrix-free*
+    buckets (``(n, d)`` points input under the squared-Euclidean
+    convention: ward by default, average/weighted with an explicit
+    ``metric="sqeuclidean"``) of at least
+    :data:`repro.core.nnchain.NNCHAIN_BATCH_AUTO_MIN_N` to the batched
+    NN-chain engine, which never builds the ``(n, n)`` matrices and pads
+    O(n·d) instead of O(n²) per lane.  ``"nnchain"`` forces the chain
+    for every bucket (reducible methods, serial backend only); ``"lw"``
+    pins the LW loop everywhere.  NN-chain merge lists come back
+    height-sorted (:func:`repro.core.dendrogram.canonical_order`) —
+    same dendrogram as LW to float tolerance on tie-free input, not
+    bit-identical — so pin ``algorithm="lw"`` where bit-identity with
+    the single-problem LW runs matters.
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
     if backend == "auto":
-        backend = "distributed" if len(jax.devices()) > 1 else "serial"
+        # an explicit nnchain request owns the backend choice (it is a
+        # single-device engine) — same rule as cluster()
+        backend = (
+            "serial" if algorithm == "nnchain"
+            else "distributed" if len(jax.devices()) > 1
+            else "serial"
+        )
     if backend not in ("serial", "distributed", "kernel"):
         raise ValueError(f"unknown backend {backend!r}")
 
     interps = [
-        _interpret_input(data, method, metric, is_distance) for data in problems
+        _interpret_input(data, method, metric, is_distance, materialize=False)
+        for data in problems
     ]
-    matrices = [np.asarray(D) for D, _, _ in interps]
+    # Per problem: matrix-free capable iff the points mode's geometric
+    # summaries apply (same capability rule as cluster()'s matrix_free).
+    # A capable problem whose bucket resolves to nnchain ships points and
+    # never builds its matrix; everything else builds the dense matrix
+    # here (points input embeds via its metric, exactly as before).
+    matrices: list[np.ndarray | None] = []
+    points_list: list[np.ndarray | None] = []
+    algos: list[str] = []
+    sizes: list[int] = []
+    for D, pts, used_metric in interps:
+        n_b = int((D if pts is None else pts).shape[0])
+        sizes.append(n_b)
+        capable = (
+            pts is not None and pts.ndim == 2
+            and method in POINTS_METHODS and used_metric == "sqeuclidean"
+        )
+        algo_b = resolve_batch_algorithm(
+            algorithm, method=method, engine=backend,
+            bucket_n=bucket_n(max(n_b, 2)), variant=variant,
+            compaction=compaction, points_capable=capable,
+        )
+        algos.append(algo_b)
+        if algo_b == "nnchain" and capable:
+            matrices.append(None)
+            points_list.append(np.asarray(pts, np.float32))
+        else:
+            matrices.append(
+                np.asarray(D if pts is None
+                           else build_distance_matrix(pts, used_metric))
+            )
+            points_list.append(None)
 
     merge_lists, stats = cluster_batch_merges(
         matrices,
@@ -532,17 +569,21 @@ def cluster_batch(
         stop_at_k=stop_at_k,
         distance_threshold=distance_threshold,
         compaction=compaction,
+        algorithm=algorithm,
+        points=points_list,
     )
     results = [
         ClusterResult(
             merges=np.asarray(m),
             method=method,
             backend=backend,
-            n_leaves=mat.shape[0],
+            algorithm=algo,
+            n_leaves=n_b,
             points=pts if keep_inputs else None,
-            distances=mat if keep_inputs else None,
+            distances=mat if (keep_inputs and mat is not None) else None,
             metric=used_metric,
         )
-        for m, mat, (_, pts, used_metric) in zip(merge_lists, matrices, interps)
+        for m, mat, algo, n_b, (_, pts, used_metric)
+        in zip(merge_lists, matrices, algos, sizes, interps)
     ]
     return BatchResult(results=results, stats=stats)

@@ -22,15 +22,30 @@ Ragged batches are padded into **shape buckets** (the ``configs/shapes.py``
 idiom: a small static grid of shapes so compiles are amortized): problem
 ``n`` is rounded up to the next bucket, the batch axis is rounded up to a
 power of two, and XLA's jit cache then guarantees one compile per
-``(bucket_n, bucket_B, method, engine, variant, compaction)`` for the
-lifetime of the process (a compacted run's whole stage schedule lives
-inside that one program).  Padded slots are born dead (``alive=False``) and padded
-*problems* have ``n_real=0``.  The vmap and shard_map engines emit merge
-lists bit-identical to the single-problem serial engine; the kernel
-engine matches merge indices exactly with distances equal to float
-tolerance (the single-problem kernel contract).  The engine-level
-``variant`` / ``stop_at_k`` / ``distance_threshold`` knobs pass straight
-through to every engine.
+``(bucket_n, bucket_B, method, engine, variant, compaction, algorithm)``
+for the lifetime of the process (a compacted run's whole stage schedule
+lives inside that one program).  Padded slots are born dead
+(``alive=False``) and padded *problems* have ``n_real=0``.  The vmap and
+shard_map engines emit merge lists bit-identical to the single-problem
+serial engine; the kernel engine matches merge indices exactly with
+distances equal to float tolerance (the single-problem kernel contract).
+The engine-level ``variant`` / ``stop_at_k`` / ``distance_threshold``
+knobs pass straight through to every engine.
+
+A bucket may also run the **batched NN-chain engine** (DESIGN.md §11) —
+``algorithm="nnchain"`` explicitly, or ``"auto"`` for matrix-free
+points buckets of :data:`repro.core.nnchain.NNCHAIN_BATCH_AUTO_MIN_N`
+or larger (the measured win; dense buckets keep LW under ``auto``).
+NN-chain buckets are canonicalized: the signature pins
+``n_steps = bucket_n − 1``, ``with_threshold=False``, baseline variant
+and no compaction (the chain runs the full agglomeration and the
+scheduler applies early stop post-hoc via
+:func:`repro.core.dendrogram.truncate_canonical`), so one executable
+serves every early-stop knob combination.  Their merge lists come back
+*height-sorted* (:func:`repro.core.dendrogram.canonical_order`) —
+equivalent to the LW lists (same clusters and heights to float
+tolerance) but not bit-identical; pin ``algorithm="lw"`` where the LW
+loop's row-major tie-breaking must be reproduced bit-for-bit.
 """
 
 from __future__ import annotations
@@ -52,7 +67,10 @@ from repro.core.engine import (
     run_dense,
     symmetrize,
 )
+from repro.core import dendrogram as dg
+from repro.core import nnchain as _nnchain
 from repro.core.linkage import METHODS
+from repro.core.nnchain import resolve_batch_algorithm
 
 #: Static padded-n grid (shape buckets).  Problems are rounded up to the
 #: smallest bucket that fits; one compile per touched bucket.
@@ -98,6 +116,8 @@ class BucketSignature:
     n_steps: int           # static trip count = max(bucket_n - stop_at_k, 0)
     with_threshold: bool   # structural: while_loop vs fori_loop
     compaction: bool = False  # structural: staged vs single-stage loop
+    algorithm: str = "lw"     # merge engine: 'lw' | 'nnchain'
+    points_dim: int = 0       # >0: matrix-free (B, n, d) operands (nnchain)
 
 
 def _resolve_bucket_compaction(flag, engine: str, bucket_n: int,
@@ -128,17 +148,44 @@ def bucket_signature(
     with_threshold: bool = False,
     b_multiple: int = 1,
     compaction: bool | str = "auto",
+    algorithm: str = "lw",
+    points_dim: int = 0,
 ) -> BucketSignature:
     """Signature of the bucket serving ``batch`` problems of ≤ ``n`` items.
 
     ``n`` rounds up to the bucket grid and ``batch`` to a power of two
     (times ``b_multiple``, the device count for the sharded engine) —
     exactly the rounding :func:`cluster_batch_merges` performs, so a key
-    computed here matches the dispatch it predicts.  ``compaction`` may
-    be the user knob (``"auto"``); the signature stores the *resolved*
-    per-bucket value.
+    computed here matches the dispatch it predicts.  ``compaction`` and
+    ``algorithm`` may be the user knobs (``"auto"``); the signature
+    stores the *resolved* per-bucket values
+    (:func:`repro.core.nnchain.resolve_batch_algorithm` with
+    ``points_capable = points_dim > 0``).  An NN-chain bucket is
+    canonicalized — full trip count, no threshold structure, baseline
+    variant, no compaction — because the chain always runs the complete
+    agglomeration and early stop is post-hoc: one executable per
+    ``(bucket_n, bucket_B, method[, points_dim])`` regardless of the
+    caller's early-stop knobs.
     """
     bn = bucket_n(n)
+    algo = resolve_batch_algorithm(
+        algorithm, method=method, engine=engine, bucket_n=bn,
+        variant=variant, compaction=compaction,
+        points_capable=points_dim > 0,
+    )
+    if algo == "nnchain":
+        return BucketSignature(
+            bucket_n=bn,
+            bucket_B=bucket_batch(batch, b_multiple),
+            method=method,
+            engine="serial",
+            variant="baseline",
+            n_steps=bn - 1,
+            with_threshold=False,
+            compaction=False,
+            algorithm="nnchain",
+            points_dim=points_dim,
+        )
     n_steps = max(bn - stop_at_k, 0)
     return BucketSignature(
         bucket_n=bn,
@@ -160,8 +207,11 @@ class BatchStats:
     buckets: tuple[tuple[int, int], ...]   # (bucket_n, n_problems) per bucket
     padded_problems: int                   # dead problems added for B rounding
     engine: str
-    cells_real: int = 0                    # sum of n_b² over real problems
-    cells_padded: int = 0                  # sum of bucket_n² · B_pad dispatched
+    cells_real: int = 0                    # sum of n_b² (n_b·d matrix-free) real
+    cells_padded: int = 0                  # sum of cells dispatched incl. padding
+    # (bucket_n, 'lw' | 'nnchain') per dispatched bucket, aligned with
+    # `buckets`; a ragged batch may mix engines across its buckets
+    bucket_algorithms: tuple[tuple[int, str], ...] = ()
 
     @property
     def pad_waste(self) -> float:
@@ -300,6 +350,26 @@ def pack_bucket(
     return Db, n_real
 
 
+def pack_points_bucket(
+    points: list[np.ndarray], sig: BucketSignature
+) -> tuple[np.ndarray, np.ndarray]:
+    """Stack one matrix-free bucket's point sets into the engine layout.
+
+    Returns ``(Xb, n_real)`` for the executable ``sig`` names:
+    ``(bucket_B, bucket_n, points_dim)`` stacked points (padding rows
+    are inert — padded slots are born dead in the engine) and the
+    ``(bucket_B,)`` int32 real-size vector.  The matrix-free counterpart
+    of :func:`pack_bucket`: a padded lane costs O(bucket_n · d) host
+    memory instead of O(bucket_n²), which is the whole point of routing
+    points traffic through the NN-chain bucket (DESIGN.md §11)."""
+    Xb = np.zeros((sig.bucket_B, sig.bucket_n, sig.points_dim), np.float32)
+    for b, X in enumerate(points):
+        Xb[b, : X.shape[0]] = X
+    n_real = np.zeros((sig.bucket_B,), np.int32)
+    n_real[: len(points)] = [X.shape[0] for X in points]
+    return Xb, n_real
+
+
 def merge_prefix(n: int, stop_at_k: int, n_merges: int) -> int:
     """Rows of a padded slot's merge buffer that belong to the problem.
 
@@ -321,6 +391,8 @@ def cluster_batch_merges(
     stop_at_k: int = 1,
     distance_threshold: float | None = None,
     compaction: bool | str = "auto",
+    algorithm: str = "auto",
+    points: list[np.ndarray | None] | None = None,
 ) -> tuple[list[np.ndarray], BatchStats]:
     """Cluster many independent ``(n_b, n_b)`` distance matrices at once.
 
@@ -335,6 +407,26 @@ def cluster_batch_merges(
 
     ``engine``: ``serial`` (vmap, one device), ``distributed`` (problems
     sharded over the mesh), or ``kernel`` (Pallas inner loops).
+
+    ``algorithm`` routes each *bucket* through
+    :func:`repro.core.nnchain.resolve_batch_algorithm` — ``"auto"``
+    (default) keeps dense buckets on LW and sends matrix-free points
+    buckets of ``NNCHAIN_BATCH_AUTO_MIN_N`` or larger to the batched
+    NN-chain engine; ``"nnchain"`` forces the chain for every bucket
+    (reducible methods, serial engine only).  NN-chain merge lists come
+    back **canonicalized** (height-sorted, early stop applied post-hoc
+    via :func:`repro.core.dendrogram.truncate_canonical`): same clusters
+    and heights as LW to float tolerance, not bit-identical.
+
+    ``points`` (optional, aligned with ``matrices``) marks matrix-free
+    capable problems: entry ``b`` is the ``(n_b, d)`` float point set of
+    problem ``b`` *under the squared-Euclidean convention of*
+    :data:`repro.core.nnchain.POINTS_METHODS` — the caller asserts that
+    convention by supplying it — and ``matrices[b]`` may then be
+    ``None``.  A capable problem whose bucket routes to nnchain is
+    dispatched matrix-free (the ``(n, n)`` matrix is never built, pad
+    waste O(n·d)); one whose bucket stays on LW gets its matrix built
+    here from the points.
     """
     if method not in METHODS:
         raise ValueError(f"unknown linkage method {method!r}")
@@ -344,12 +436,44 @@ def cluster_batch_merges(
         raise ValueError(f"unknown variant {variant!r}; pick from {VARIANTS}")
     if stop_at_k < 1:
         raise ValueError(f"stop_at_k must be >= 1, got {stop_at_k}")
-    matrices = [np.asarray(m) for m in matrices]   # convert once, up front
-    for b, m in enumerate(matrices):
+    if algorithm == "nnchain":
+        # validate method/engine once up front (raises on a bad combo)
+        resolve_batch_algorithm(algorithm, method=method, engine=engine,
+                                bucket_n=BUCKETS[0], variant=variant,
+                                compaction=compaction)
+    elif algorithm not in ("auto", "lw"):
+        raise ValueError(
+            f"algorithm must be 'auto', 'lw' or 'nnchain', got {algorithm!r}"
+        )
+    matrices = list(matrices)
+    pts: list[np.ndarray | None] = (
+        [None] * len(matrices) if points is None
+        else [None if p is None else np.asarray(p, np.float32)
+              for p in points]
+    )
+    if len(pts) != len(matrices):
+        raise ValueError(
+            f"points must align with matrices: {len(pts)} != {len(matrices)}"
+        )
+    sizes: list[int] = []
+    for b in range(len(matrices)):
+        p = pts[b]
+        if p is not None:
+            if p.ndim != 2:
+                raise ValueError(
+                    f"problem {b}: expected (n, d) points, got {p.shape}")
+            if p.shape[0] < 2:
+                raise ValueError(
+                    f"problem {b}: need at least 2 items, got {p.shape[0]}")
+            sizes.append(int(p.shape[0]))
+            continue
+        m = np.asarray(matrices[b])
+        matrices[b] = m
         if m.ndim != 2 or m.shape[0] != m.shape[1]:
             raise ValueError(f"problem {b}: expected a square matrix, got {m.shape}")
         if m.shape[0] < 2:
             raise ValueError(f"problem {b}: need at least 2 items, got {m.shape[0]}")
+        sizes.append(int(m.shape[0]))
 
     if engine == "distributed":
         from repro.core.distributed import flatten_mesh, make_cluster_mesh
@@ -361,18 +485,32 @@ def cluster_batch_merges(
     else:
         b_multiple = 1
 
-    # group problem indices by shape bucket
-    groups: dict[int, list[int]] = {}
-    for idx, m in enumerate(matrices):
-        groups.setdefault(bucket_n(m.shape[0]), []).append(idx)
+    # group problem indices by (shape bucket, matrix-free dim): a points
+    # problem joins the matrix-free bucket only when its bucket resolves
+    # to nnchain — otherwise its matrix is built and it rides the dense
+    # bucket like any other problem
+    groups: dict[tuple[int, int], list[int]] = {}
+    for idx in range(len(matrices)):
+        bn = bucket_n(sizes[idx])
+        p = pts[idx]
+        use_points = p is not None and resolve_batch_algorithm(
+            algorithm, method=method, engine=engine, bucket_n=bn,
+            variant=variant, compaction=compaction, points_capable=True,
+        ) == "nnchain"
+        if p is not None and not use_points and matrices[idx] is None:
+            diff = p[:, None, :] - p[None, :, :]
+            matrices[idx] = np.einsum("ijk,ijk->ij", diff, diff).astype(np.float32)
+        groups.setdefault((bn, p.shape[1] if use_points else 0), []).append(idx)
 
     out: list[np.ndarray | None] = [None] * len(matrices)
     bucket_log: list[tuple[int, int]] = []
+    algo_log: list[tuple[int, str]] = []
     padded_problems = 0
     cells_padded = 0
+    cells_real = 0
 
-    for n_pad in sorted(groups):
-        idxs = groups[n_pad]
+    for n_pad, pdim in sorted(groups):
+        idxs = groups[(n_pad, pdim)]
         bucket_log.append((n_pad, len(idxs)))
         sig = bucket_signature(
             n_pad,
@@ -384,16 +522,52 @@ def cluster_batch_merges(
             with_threshold=distance_threshold is not None,
             b_multiple=b_multiple,
             compaction=compaction,
+            algorithm=algorithm,
+            points_dim=pdim,
         )
+        algo_log.append((n_pad, sig.algorithm))
         B_pad = sig.bucket_B
         padded_problems += B_pad - len(idxs)
-        cells_padded += B_pad * n_pad * n_pad
-
-        Db, n_real = pack_bucket([matrices[i] for i in idxs], sig)
 
         thr = jnp.float32(
             0.0 if distance_threshold is None else distance_threshold
         )
+
+        if sig.algorithm == "nnchain":
+            if pdim:
+                cells_padded += B_pad * n_pad * pdim
+                cells_real += sum(sizes[i] * pdim for i in idxs)
+                Xb, n_real = pack_points_bucket([pts[i] for i in idxs], sig)
+                res = _nnchain._run_points_batch(
+                    Xb, n_real, thr, method=method, n_steps=sig.n_steps
+                )
+            else:
+                cells_padded += B_pad * n_pad * n_pad
+                cells_real += sum(sizes[i] ** 2 for i in idxs)
+                Db, n_real = pack_bucket([matrices[i] for i in idxs], sig)
+                res = _nnchain._run_batch(
+                    Db, n_real, thr, method=method, n_steps=sig.n_steps
+                )
+            merges = np.asarray(res.merges)
+            n_merges = np.asarray(res.n_merges)
+            for slot, idx in enumerate(idxs):
+                nr = sizes[idx]
+                if int(n_merges[slot]) != nr - 1:
+                    raise RuntimeError(
+                        "NN-chain loop hit its iteration cap before "
+                        "finishing — the input likely contains NaNs (the "
+                        "chain invariant needs a total order on distances)"
+                    )
+                canon = dg.canonical_order(merges[slot, : nr - 1], n=nr)
+                out[idx] = dg.truncate_canonical(
+                    canon, nr, stop_at_k, distance_threshold
+                )
+            continue
+
+        cells_padded += B_pad * n_pad * n_pad
+        cells_real += sum(sizes[i] ** 2 for i in idxs)
+        Db, n_real = pack_bucket([matrices[i] for i in idxs], sig)
+
         kwargs = dict(
             method=method,
             n_steps=sig.n_steps,
@@ -424,8 +598,9 @@ def cluster_batch_merges(
         buckets=tuple(bucket_log),
         padded_problems=padded_problems,
         engine=engine,
-        cells_real=sum(m.shape[0] ** 2 for m in matrices),
+        cells_real=cells_real,
         cells_padded=cells_padded,
+        bucket_algorithms=tuple(algo_log),
     )
     assert all(m is not None for m in out)
     return out, stats  # type: ignore[return-value]

@@ -162,6 +162,36 @@ def canonical_order(
     return out
 
 
+def truncate_canonical(
+    merges: np.ndarray,
+    n: int,
+    stop_at_k: int = 1,
+    distance_threshold: float | None = None,
+) -> np.ndarray:
+    """Apply the LW loop's early-stop semantics to a *canonical* (height-
+    sorted) full merge list: keep the first ``n − stop_at_k`` rows, then
+    drop everything from the first merge above the threshold on.
+
+    This is the post-hoc half of the NN-chain early-stop contract
+    (``cluster``'s docstring): the chain engine always runs the full
+    O(n²) agglomeration, and every consumer — the single-problem
+    ``cluster`` path, the batched scheduler, the service batcher — cuts
+    the :func:`canonical_order` output through this one function so the
+    prefix matches what the LW loop's genuine early exit records.  The
+    row count comes from the same
+    :func:`repro.core.engine.resolve_n_steps` the LW loop trips on —
+    one source of truth for the prefix contract.
+    """
+    from repro.core.engine import resolve_n_steps
+
+    merges = np.asarray(merges)[: resolve_n_steps(n, stop_at_k)]
+    if distance_threshold is not None:
+        above = merges[:, 2] > distance_threshold
+        if above.any():
+            merges = merges[: int(np.argmax(above))]
+    return merges
+
+
 def merge_leafsets(merges: np.ndarray, n: int | None = None) -> list[frozenset]:
     """Leaf members of the cluster each merge creates, in merge order.
 

@@ -57,6 +57,22 @@ Early termination (``stop_at_k`` / ``distance_threshold``) is *post-hoc*
 here: the full agglomeration is O(n²) anyway, so
 :func:`repro.core.api.cluster` runs it, canonicalizes, and truncates the
 height-sorted prefix — the same result the LW loop's early exit returns.
+
+**Batched compositions** (:func:`nn_chain_batched`,
+:func:`nn_chain_batched_from_points`, DESIGN.md §11): the same chain
+loop ``vmap``-ed over a shape bucket.  The per-lane merge target
+becomes a *traced* scalar (``max(n_real − 1, 0)``) instead of the
+static trip count, and the ``while_loop`` vmap batching rule then
+freezes finished lanes exactly the way the LW ``distance_threshold``
+loop does — a lane whose chain has emitted its last merge (or a dead
+padded lane, target 0) stops contributing state updates while the
+slower lanes run on.  Padded slots are born dead and masked at read,
+so each lane's merge sequence is the serial engine's (heights to the
+usual padded-shape float tolerance).  The batched entry points keep the
+``(Db, n_real, threshold)`` operand convention of the batched LW
+engines so the service AOT cache compiles them interchangeably; the
+threshold operand is accepted and ignored — early stop stays post-hoc
+(:func:`repro.core.dendrogram.truncate_canonical`).
 """
 
 from __future__ import annotations
@@ -74,9 +90,13 @@ __all__ = [
     "REDUCIBLE_METHODS",
     "POINTS_METHODS",
     "NNCHAIN_AUTO_MIN_N",
+    "NNCHAIN_BATCH_AUTO_MIN_N",
     "nn_chain",
     "nn_chain_from_points",
+    "nn_chain_batched",
+    "nn_chain_batched_from_points",
     "resolve_algorithm",
+    "resolve_batch_algorithm",
     "resolve_matrix_free",
 ]
 
@@ -100,6 +120,20 @@ POINTS_METHODS: tuple[str, ...] = ("ward", "average", "weighted")
 #: single-digit milliseconds and auto stays on the LW path every
 #: existing caller was tuned against).
 NNCHAIN_AUTO_MIN_N = 256
+
+#: Smallest *bucket* n for which batched/service ``algorithm="auto"``
+#: prefers the vmapped **matrix-free** NN-chain engine over the batched
+#: LW loop.  The trade differs from the serial crossover: under vmap the
+#: chain loop's per-lane dynamic reads lower to gathers (~tens of ns per
+#: element on XLA:CPU vs ~1 ns for the LW loop's big fused selects) and
+#: ``lax.cond`` executes both branches, so the *dense* batched chain
+#: only ties the compacted LW bucket (0.8–1.3x measured) and auto keeps
+#: dense buckets on LW at every size.  The points composition has no
+#: per-lane matrix gathers — its row build is one elementwise
+#: ``(B, n, d)`` pass — and beats the compacted LW bucket ≥1.5x from
+#: this bucket size up (4–11x by bucket 128–256; measured in
+#: benchmarks/bench_service.py, EXPERIMENTS.md §Service).
+NNCHAIN_BATCH_AUTO_MIN_N = 64
 
 #: Smallest n for which ``matrix_free="auto"`` drops the dense matrix on
 #: capable inputs: below this the (n, n) build is a few MB and the dense
@@ -162,6 +196,67 @@ def resolve_algorithm(
         and n >= NNCHAIN_AUTO_MIN_N
         and variant == "baseline"
         and compaction in (None, "auto")
+    ):
+        return "nnchain"
+    return "lw"
+
+
+def resolve_batch_algorithm(
+    flag: str,
+    *,
+    method: str,
+    engine: str,
+    bucket_n: int,
+    variant: str = "baseline",
+    compaction="auto",
+    points_capable: bool = False,
+) -> str:
+    """Canonical ``algorithm=`` switch for one batched/service bucket.
+
+    Mirrors :func:`resolve_algorithm` with the batched trade-offs:
+    ``"nnchain"`` is explicit (reducible method, ``serial`` vmap engine —
+    the distributed/kernel batch engines keep the LW loop; the dense
+    composition is exact but only ties the compacted LW bucket on CPU),
+    and ``"auto"`` routes a bucket to the vmapped chain only where it
+    *measures* faster: a **matrix-free** bucket (``points_capable`` —
+    ``(n, d)`` points input under a :data:`POINTS_METHODS`
+    squared-Euclidean convention) of :data:`NNCHAIN_BATCH_AUTO_MIN_N` or
+    larger, on the default-knob serial path (baseline variant, untouched
+    compaction).  Dense buckets stay on LW under ``auto``: the chain
+    loop's per-lane gathers eat its O(n) asymptotic edge at every bucket
+    size the grid serves (constant documented at
+    :data:`NNCHAIN_BATCH_AUTO_MIN_N`).  Resolved per *bucket*, not per
+    batch: one ragged ``cluster_batch`` may legitimately run small
+    buckets on LW and large points buckets on nnchain.
+    """
+    if flag == "lw":
+        return "lw"
+    if flag == "nnchain":
+        if method not in REDUCIBLE_METHODS:
+            raise ValueError(
+                f"algorithm='nnchain' needs a reducible method "
+                f"{REDUCIBLE_METHODS}, got {method!r} (centroid/median can "
+                "produce inversions that break the chain invariant; use "
+                "algorithm='lw')"
+            )
+        if engine not in ("auto", "serial"):
+            raise ValueError(
+                f"batched algorithm='nnchain' is the vmapped single-device "
+                f"chain; engine={engine!r} keeps the LW merge loop (pass "
+                "engine='serial' or algorithm='lw')"
+            )
+        return "nnchain"
+    if flag != "auto":
+        raise ValueError(
+            f"algorithm must be 'auto', 'lw' or 'nnchain', got {flag!r}"
+        )
+    if (
+        points_capable
+        and method in POINTS_METHODS
+        and engine == "serial"
+        and bucket_n >= NNCHAIN_BATCH_AUTO_MIN_N
+        and variant == "baseline"
+        and compaction in (None, False, "auto")
     ):
         return "nnchain"
     return "lw"
@@ -240,17 +335,24 @@ class NNState(NamedTuple):
 class NNChainOps(NamedTuple):
     """The two primitives a chain-loop composition supplies.
 
-    row:   ``(state, top) -> (n,)`` current distances from cluster
-           ``top`` to every slot, masked to ``+inf`` at dead slots and
-           ``top`` itself — ONE O(n) (dense) / O(n·d) (points) pass.
-    merge: ``(state, i, j, dmin) -> state`` — commit the merge into the
-           representation (O(n) dense row/col rewrite, O(d) summary
-           update), leaving ``alive``/``sizes`` untouched (the shared
-           skeleton owns that bookkeeping).
+    row:   ``(state, top) -> (n,)`` current *raw* distances from cluster
+           ``top`` to every slot — ONE O(n) (dense) / O(n·d) (points)
+           pass.  The chain loop owns the liveness mask (dead slots and
+           ``top`` itself go ``+inf`` before the min), so the raw row
+           can be handed to ``merge`` unmasked.
+    merge: ``(state, i, j, dmin, top, row_top) -> state`` — commit the
+           merge into the representation (O(n) dense row rewrite, O(d)
+           summary update), leaving ``alive``/``sizes`` untouched (the
+           shared skeleton owns that bookkeeping).  ``row_top`` is the
+           raw ``row(state, top)`` already computed this trip — the
+           dense composition reuses it as the ``top`` side of the LW
+           recurrence instead of paying a second per-lane row read
+           (under vmap those reads are per-lane gathers, the dominant
+           batched cost).
     """
 
     row: Callable[[NNState, jax.Array], jax.Array]
-    merge: Callable[[NNState, jax.Array, jax.Array, jax.Array], NNState]
+    merge: Callable[..., NNState]
 
 
 def _scalar_set(vec: jax.Array, idx: jax.Array, value) -> jax.Array:
@@ -260,7 +362,9 @@ def _scalar_set(vec: jax.Array, idx: jax.Array, value) -> jax.Array:
     return jax.lax.dynamic_update_slice(vec, upd, (idx,))
 
 
-def _chain_loop(ops: NNChainOps, state: NNState, n_steps: int) -> NNState:
+def _chain_loop(
+    ops: NNChainOps, state: NNState, n_steps: int | jax.Array
+) -> NNState:
     """Run the NN-chain loop until ``n_steps`` merges are recorded.
 
     Each trip either *extends* the chain by the tip's nearest neighbor
@@ -272,8 +376,16 @@ def _chain_loop(ops: NNChainOps, state: NNState, n_steps: int) -> NNState:
     older chain entries.  All index bookkeeping is dynamic-update-slice,
     never a scatter, and the argmin is the engine's vectorized
     min + first-index recovery (XLA:CPU scalarizes variadic reduces).
+
+    ``n_steps`` may be a *traced* scalar (the batched compositions pass
+    each lane's ``max(n_real − 1, 0)``): the merge buffer's static row
+    count comes from :func:`_init_state`, and under ``vmap`` the
+    while_loop batching rule turns the per-lane cond into
+    ``any(cond)`` + per-lane ``select`` — lanes whose target is met stop
+    absorbing body results while slower lanes run on (the frozen-lane
+    invariant, same mechanism as the LW ``distance_threshold`` loop).
     """
-    if n_steps <= 0:
+    if isinstance(n_steps, int) and n_steps <= 0:
         return state
     n = state.alive.shape[0]
     ks = jnp.arange(n)
@@ -297,7 +409,8 @@ def _chain_loop(ops: NNChainOps, state: NNState, n_steps: int) -> NNState:
             ),
             jnp.int32(n),
         )
-        row = ops.row(s, top)
+        row_raw = ops.row(s, top)
+        row = jnp.where(s.alive & (ks != top), row_raw, _INF)
         m = jnp.min(row)
         prev_hit = (prev < n) & (row[jnp.minimum(prev, n - 1)] == m)
         c = jnp.where(
@@ -307,7 +420,7 @@ def _chain_loop(ops: NNChainOps, state: NNState, n_steps: int) -> NNState:
         def do_merge(s: NNState) -> NNState:
             i, j = jnp.minimum(top, c), jnp.maximum(top, c)
             new_size = s.sizes[i] + s.sizes[j]
-            s = ops.merge(s, i, j, m)
+            s = ops.merge(s, i, j, m, top, row_raw)
             record = jnp.stack(
                 [i.astype(_F32), j.astype(_F32), m, new_size]
             )[None, :]
@@ -386,13 +499,15 @@ def _dense_nnchain_ops(method: str, n: int) -> NNChainOps:
         return jnp.where(ver > ver[t], r_col, r_row)
 
     def row(s: NNState, top: jax.Array) -> jax.Array:
-        r = current_row(s.rep, top)
-        return jnp.where(s.alive & (ks != top), r, _INF)
+        return current_row(s.rep, top)
 
-    def merge(s: NNState, i, j, dmin) -> NNState:
+    def merge(s: NNState, i, j, dmin, top, row_top) -> NNState:
         D, ver = s.rep
-        d_ki = current_row(s.rep, i)
-        d_kj = current_row(s.rep, j)
+        # {i, j} == {top, c}: top's current row was computed this trip,
+        # so only the partner pays a fresh (gathering) row read
+        row_c = current_row(s.rep, jnp.where(top == i, j, i))
+        d_ki = jnp.where(top == i, row_top, row_c)
+        d_kj = jnp.where(top == i, row_c, row_top)
         keep = s.alive & (ks != i) & (ks != j)
         new = update_row(method, d_ki, d_kj, dmin, s.sizes[i], s.sizes[j],
                          s.sizes)
@@ -475,9 +590,9 @@ def _points_nnchain_ops(
             d = 2.0 * n_top * s.sizes / (n_top + s.sizes) * sq
         else:                                   # average / weighted
             d = sq + u + u[top]
-        return jnp.where(s.alive & (ks != top), d, _INF)
+        return d
 
-    def merge(s: NNState, i, j, dmin) -> NNState:
+    def merge(s: NNState, i, j, dmin, top, row_top) -> NNState:
         W, u = s.rep
         w_i = jax.lax.dynamic_slice_in_dim(W, i, 1, axis=0)[0]
         w_j = jax.lax.dynamic_slice_in_dim(W, j, 1, axis=0)[0]
@@ -571,3 +686,154 @@ def nn_chain_from_points(
                            use_pallas=True, block_n=bn, interpret=interpret)
     return _run_points(X, jnp.ones((n,), bool), method=method, n_steps=n - 1,
                        use_pallas=False, block_n=block_n, interpret=False)
+
+
+# ---------------------------------------------------------------------------
+# batched compositions (vmap over a shape bucket)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("method", "n_steps"))
+def _run_batch(
+    Db: jax.Array,
+    n_real: jax.Array,
+    threshold: jax.Array,
+    *,
+    method: str,
+    n_steps: int,
+) -> LWResult:
+    """Vmapped dense NN-chain over a ``(B, n, n)`` bucket.
+
+    Same ``(Db, n_real, threshold)`` operand convention as
+    :func:`repro.core.batched._run_vmap` so the service AOT cache lowers
+    both through one code path.  ``threshold`` is accepted and ignored:
+    the chain emits merges in chain order, so early stop is post-hoc
+    canonical truncation (module docstring) — the operand only keeps the
+    compiled signature uniform.  ``n_steps`` is the *static* merge-buffer
+    capacity (``bucket_n − 1``); each lane's actual target is the traced
+    ``max(n_real − 1, 0)``, and dead padded lanes (target 0) never
+    absorb a body result.
+    """
+    del threshold  # post-hoc early stop; operand kept for AOT uniformity
+    Db = symmetrize(Db)
+    n = Db.shape[-1]
+
+    def run(D: jax.Array, n_r: jax.Array) -> LWResult:
+        alive = jnp.arange(n) < n_r
+        rep = (jnp.where(alive[:, None] & alive[None, :], D, 0.0),
+               jnp.zeros((n,), jnp.int32))
+        state = _init_state(rep, alive, n_steps)
+        target = jnp.minimum(jnp.maximum(n_r - 1, 0), n_steps).astype(jnp.int32)
+        out = _chain_loop(_dense_nnchain_ops(method, n), state, target)
+        return LWResult(merges=out.merges, n_merges=out.n_merges)
+
+    return jax.vmap(run)(Db, jnp.asarray(n_real, jnp.int32))
+
+
+def nn_chain_batched(
+    Db: jax.Array, n_real, method: str = "complete"
+) -> LWResult:
+    """Batched NN-chain over a ``(B, n, n)`` shape bucket.
+
+    Lane ``b`` agglomerates ``Db[b, :n_real[b], :n_real[b]]``; rows and
+    columns past ``n_real[b]`` are padding (born dead, masked at read).
+    Returns stacked chain-order merge buffers — lane ``b``'s real rows
+    are ``merges[b, :n_real[b] - 1]``; pass them through
+    :func:`repro.core.dendrogram.canonical_order` before cutting, same
+    contract as :func:`nn_chain` (``cluster_batch`` does this for you).
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown linkage method {method!r}")
+    if method not in REDUCIBLE_METHODS:
+        raise ValueError(
+            f"nn_chain is exact only for reducible methods "
+            f"{REDUCIBLE_METHODS}, got {method!r}"
+        )
+    Db = jnp.asarray(Db, _F32)
+    if Db.ndim != 3 or Db.shape[1] != Db.shape[2]:
+        raise ValueError(
+            f"expected a (B, n, n) bucket of distance matrices, got {Db.shape}"
+        )
+    n_real = jnp.asarray(n_real, jnp.int32)
+    if n_real.shape != (Db.shape[0],):
+        raise ValueError(
+            f"n_real must be ({Db.shape[0]},) to match the bucket, "
+            f"got {n_real.shape}"
+        )
+    n = int(Db.shape[1])
+    if n < 2:
+        return LWResult(
+            merges=jnp.zeros((Db.shape[0], 0, 4), _F32),
+            n_merges=jnp.zeros((Db.shape[0],), jnp.int32),
+        )
+    return _run_batch(Db, n_real, jnp.float32(jnp.inf),
+                      method=method, n_steps=n - 1)
+
+
+@partial(jax.jit, static_argnames=("method", "n_steps"))
+def _run_points_batch(
+    Xb: jax.Array,
+    n_real: jax.Array,
+    threshold: jax.Array,
+    *,
+    method: str,
+    n_steps: int,
+) -> LWResult:
+    """Vmapped matrix-free NN-chain over a ``(B, n, d)`` points bucket —
+    pad waste is O(n·d) per lane instead of the dense bucket's O(n²),
+    and the per-trip row build has no per-lane matrix gathers at all
+    (only ``(B, d)`` summary reads) — the measured service win
+    (EXPERIMENTS.md §Service).  ``threshold`` is accepted and ignored,
+    same post-hoc contract as :func:`_run_batch`."""
+    del threshold  # post-hoc early stop; operand kept for AOT uniformity
+    n = Xb.shape[1]
+
+    def run(X: jax.Array, n_r: jax.Array) -> LWResult:
+        alive = jnp.arange(n) < n_r
+        rep = (jnp.asarray(X, _F32), jnp.zeros((n,), _F32))
+        state = _init_state(rep, alive, n_steps)
+        target = jnp.minimum(jnp.maximum(n_r - 1, 0), n_steps).astype(jnp.int32)
+        ops = _points_nnchain_ops(
+            method, n, use_pallas=False, block_n=512, interpret=False
+        )
+        out = _chain_loop(ops, state, target)
+        return LWResult(merges=out.merges, n_merges=out.n_merges)
+
+    return jax.vmap(run)(Xb, jnp.asarray(n_real, jnp.int32))
+
+
+def nn_chain_batched_from_points(
+    Xb: jax.Array, n_real, method: str = "ward"
+) -> LWResult:
+    """Batched matrix-free agglomeration of a ``(B, n, d)`` points bucket.
+
+    Lane ``b`` clusters ``Xb[b, :n_real[b]]`` under the squared-Euclidean
+    convention of :func:`nn_chain_from_points` (:data:`POINTS_METHODS`
+    only); padding rows are inert.  The ``(n, n)`` matrix is never
+    materialized in any lane, so a ragged bucket wastes O(n·d) per
+    padded lane, not O(n²).  Merges are in chain order, same contract as
+    :func:`nn_chain_batched`.
+    """
+    if method not in POINTS_METHODS:
+        raise ValueError(
+            f"matrix-free points mode supports {POINTS_METHODS} (their LW "
+            f"distance is a geometric-summary function), got {method!r} — "
+            "build the distance matrices and use nn_chain_batched instead"
+        )
+    Xb = jnp.asarray(Xb, _F32)
+    if Xb.ndim != 3:
+        raise ValueError(f"expected a (B, n, d) points bucket, got {Xb.shape}")
+    n_real = jnp.asarray(n_real, jnp.int32)
+    if n_real.shape != (Xb.shape[0],):
+        raise ValueError(
+            f"n_real must be ({Xb.shape[0]},) to match the bucket, "
+            f"got {n_real.shape}"
+        )
+    n = int(Xb.shape[1])
+    if n < 2:
+        return LWResult(
+            merges=jnp.zeros((Xb.shape[0], 0, 4), _F32),
+            n_merges=jnp.zeros((Xb.shape[0],), jnp.int32),
+        )
+    return _run_points_batch(Xb, n_real, jnp.float32(jnp.inf),
+                             method=method, n_steps=n - 1)

@@ -28,6 +28,16 @@ across padded shapes).  The result carries the request's
 points/distance matrix, so the streaming assignment path
 (:mod:`repro.service.assign`) can export exemplars without re-touching
 the service.
+
+Buckets route between the LW and batched NN-chain engines exactly as
+``cluster_batch`` does (``ServiceConfig.algorithm``): under ``"auto"``
+a large matrix-free points request dispatches as an ``(B, n, d)``
+NN-chain bucket — its ``(n, n)`` matrix is never built, its merge list
+comes back canonicalized (height-sorted, LW-equivalent to float
+tolerance) and a matrix-free result stores no ``distances``.  LW and
+nnchain buckets grouped out of the same window never share a
+:class:`~repro.core.batched.BucketSignature` (distinct ``algorithm`` /
+``points_dim`` fields), so they cannot collide in the compile cache.
 """
 
 from __future__ import annotations
@@ -43,7 +53,8 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.api import ClusterResult, _interpret_input
+from repro.core import dendrogram as dg
+from repro.core.api import ClusterResult, _interpret_input, build_distance_matrix
 from repro.core.batched import (
     BUCKETS,
     bucket_batch,
@@ -51,9 +62,11 @@ from repro.core.batched import (
     bucket_signature,
     merge_prefix,
     pack_bucket,
+    pack_points_bucket,
 )
 from repro.core.engine import VARIANTS
 from repro.core.linkage import METHODS
+from repro.core.nnchain import POINTS_METHODS, resolve_batch_algorithm
 from repro.service.cache import CACHEABLE_ENGINES, CompileCache, warmup_signatures
 
 
@@ -71,6 +84,17 @@ class ServiceConfig:
     method: str = "complete"
     engine: str = "serial"             # 'serial' | 'kernel'
     variant: str = "baseline"
+    # per-bucket merge engine, resolved exactly as cluster_batch resolves
+    # it (repro.core.nnchain.resolve_batch_algorithm): "auto" keeps dense
+    # buckets on LW and routes matrix-free points buckets of
+    # NNCHAIN_BATCH_AUTO_MIN_N or larger to the batched NN-chain engine;
+    # "nnchain" forces the chain (reducible methods, serial engine only)
+    algorithm: str = "auto"
+    # declared embedding dim of the steady-state *points* traffic, so
+    # warmup() also precompiles the matrix-free (B, n, d) executables;
+    # None: warm dense signatures only (points requests of another d are
+    # still served — they just pay a recorded on-demand compile)
+    points_dim: int | None = None
     stop_at_k: int = 1
     distance_threshold: float | None = None
     # engine compaction schedule; "auto" stages buckets past the first
@@ -92,6 +116,23 @@ class ServiceConfig:
             )
         if self.variant not in VARIANTS:
             raise ValueError(f"unknown variant {self.variant!r}")
+        if self.algorithm == "nnchain":
+            # raises on a non-reducible method or a non-serial engine
+            resolve_batch_algorithm(
+                "nnchain", method=self.method, engine=self.engine,
+                bucket_n=BUCKETS[0], variant=self.variant,
+                compaction=self.compaction,
+            )
+        elif self.algorithm not in ("auto", "lw"):
+            raise ValueError(
+                f"algorithm must be 'auto', 'lw' or 'nnchain', got "
+                f"{self.algorithm!r}"
+            )
+        if self.points_dim is not None and self.points_dim < 1:
+            raise ValueError(
+                f"points_dim must be a positive dim or None, got "
+                f"{self.points_dim}"
+            )
         if self.stop_at_k < 1:
             raise ValueError(f"stop_at_k must be >= 1, got {self.stop_at_k}")
         if self.max_batch < 1:
@@ -108,6 +149,8 @@ class ServiceConfig:
                     f"declared bucket {n} is not on the bucket grid {BUCKETS}"
                 )
         working_set = len(self.bucket_ns) * bucket_batch(self.max_batch).bit_length()
+        if self.points_dim is not None:
+            working_set *= 2    # dense + matrix-free signature families
         if self.cache_capacity < working_set:
             raise ValueError(
                 f"cache_capacity={self.cache_capacity} is smaller than the "
@@ -188,11 +231,14 @@ class ServiceMetrics:
 
 @dataclass
 class _Job:
-    matrix: np.ndarray
+    # None for a matrix-free NN-chain job — the (n, n) matrix is never
+    # built; `points` then holds the (n, d) float32 operand
+    matrix: np.ndarray | None
     points: np.ndarray | None
     metric: str | None
     future: Future = field(repr=False)
     t_submit: float = 0.0
+    n: int = 0                  # problem size (leaves)
     done: bool = False          # guarded by the service condition lock
 
 
@@ -235,21 +281,28 @@ class ClusteringService:
 
         Covers every ``(bucket_n, padded-B)`` signature traffic inside
         ``config.bucket_ns`` can touch under the ``max_batch`` policy —
-        after this returns, such traffic runs with zero compiles.
+        after this returns, such traffic runs with zero compiles.  With
+        ``points_dim`` declared the matrix-free NN-chain signatures of
+        that dim are warmed too, so a warmed service performs zero
+        compiles on its first nnchain bucket.
         """
         cfg = self.config
-        return self.cache.warmup(
-            warmup_signatures(
-                cfg.bucket_ns,
-                method=cfg.method,
-                engine=cfg.engine,
-                variant=cfg.variant,
-                stop_at_k=cfg.stop_at_k,
-                with_threshold=cfg.distance_threshold is not None,
-                max_batch=cfg.max_batch,
-                compaction=cfg.compaction,
-            )
+        kw = dict(
+            method=cfg.method,
+            engine=cfg.engine,
+            variant=cfg.variant,
+            stop_at_k=cfg.stop_at_k,
+            with_threshold=cfg.distance_threshold is not None,
+            max_batch=cfg.max_batch,
+            compaction=cfg.compaction,
+            algorithm=cfg.algorithm,
         )
+        sigs = warmup_signatures(cfg.bucket_ns, **kw)
+        if cfg.points_dim is not None:
+            sigs += warmup_signatures(
+                cfg.bucket_ns, points_dim=cfg.points_dim, **kw
+            )
+        return self.cache.warmup(sigs)
 
     def flush(self, timeout: float | None = None) -> bool:
         """Block until every submitted request has resolved."""
@@ -298,22 +351,45 @@ class ClusteringService:
             fut.set_exception(RuntimeError("service is closed"))
             return fut
         try:
+            cfg = self.config
             D, points, used_metric = _interpret_input(
-                data, self.config.method, metric, is_distance
+                data, cfg.method, metric, is_distance, materialize=False
             )
-            mat = np.asarray(D, np.float32)
-            if mat.shape[0] < 2:
-                raise ValueError(
-                    f"need at least 2 items to cluster, got {mat.shape[0]}"
+            n = int((D if points is None else points).shape[0])
+            if n < 2:
+                raise ValueError(f"need at least 2 items to cluster, got {n}")
+            bn = bucket_n(n)            # raises if larger than the top bucket
+            # matrix-free routing: same capability rule and per-bucket
+            # resolution as cluster_batch — a capable request whose
+            # bucket resolves to nnchain never builds its (n, n) matrix
+            capable = (
+                points is not None and points.ndim == 2
+                and cfg.method in POINTS_METHODS
+                and used_metric == "sqeuclidean"
+            )
+            algo = resolve_batch_algorithm(
+                cfg.algorithm, method=cfg.method, engine=cfg.engine,
+                bucket_n=bn, variant=cfg.variant, compaction=cfg.compaction,
+                points_capable=capable,
+            )
+            if algo == "nnchain" and capable:
+                mat = None
+                points = np.asarray(points, np.float32)
+            else:
+                mat = np.asarray(
+                    D if points is None
+                    else build_distance_matrix(points, used_metric),
+                    np.float32,
                 )
-            bucket_n(mat.shape[0])      # raises if larger than the top bucket
         except Exception as exc:  # noqa: BLE001 — resolve, don't raise
             self.metrics.observe_failure()
             fut.set_exception(exc)
             return fut
         with self._cond:
             self._pending += 1
-        self._queue.put(_Job(mat, points, used_metric, fut, time.perf_counter()))
+        self._queue.put(
+            _Job(mat, points, used_metric, fut, time.perf_counter(), n=n)
+        )
         if self._closing.is_set():
             # close() may have drained the queue between our closing check
             # and the put — make sure this job cannot be stranded
@@ -366,19 +442,23 @@ class ClusteringService:
                     self._finish(job, error=exc)
 
     def _dispatch(self, jobs: list[_Job]) -> None:
-        groups: dict[int, list[_Job]] = {}
+        # (bucket_n, matrix-free dim or 0): LW and nnchain buckets may
+        # coexist in one window — distinct keys, distinct signatures
+        groups: dict[tuple[int, int], list[_Job]] = {}
         for job in jobs:
-            groups.setdefault(bucket_n(job.matrix.shape[0]), []).append(job)
-        for n_pad in sorted(groups):
-            group = groups[n_pad]
+            pdim = job.points.shape[1] if job.matrix is None else 0
+            groups.setdefault((bucket_n(job.n), pdim), []).append(job)
+        for key in sorted(groups):
+            group = groups[key]
             try:
-                self._run_bucket(n_pad, group)
+                self._run_bucket(key, group)
             except Exception as exc:  # noqa: BLE001 — fail the bucket's futures
                 for job in group:
                     self._finish(job, error=exc)
 
-    def _run_bucket(self, n_pad: int, group: list[_Job]) -> None:
+    def _run_bucket(self, key: tuple[int, int], group: list[_Job]) -> None:
         cfg = self.config
+        n_pad, pdim = key
         sig = bucket_signature(
             n_pad,
             len(group),
@@ -388,30 +468,54 @@ class ClusteringService:
             stop_at_k=cfg.stop_at_k,
             with_threshold=cfg.distance_threshold is not None,
             compaction=cfg.compaction,
+            algorithm=cfg.algorithm,
+            points_dim=pdim,
         )
         fn = self.cache.get(sig)
 
         # same pack/slice helpers as the offline scheduler — one rule set
-        Db, n_real = pack_bucket([j.matrix for j in group], sig)
         thr = jnp.float32(
             0.0 if cfg.distance_threshold is None else cfg.distance_threshold
         )
-        res = fn(jnp.asarray(Db), jnp.asarray(n_real), thr)
+        if pdim:
+            Xb, n_real = pack_points_bucket([j.points for j in group], sig)
+            res = fn(jnp.asarray(Xb), jnp.asarray(n_real), thr)
+            cells_real = sum(j.n * pdim for j in group)
+            cells_padded = sig.bucket_B * n_pad * pdim
+        else:
+            Db, n_real = pack_bucket([j.matrix for j in group], sig)
+            res = fn(jnp.asarray(Db), jnp.asarray(n_real), thr)
+            cells_real = sum(j.n ** 2 for j in group)
+            cells_padded = sig.bucket_B * n_pad * n_pad
         merges = np.asarray(res.merges)
         n_merges = np.asarray(res.n_merges)
         t_done = time.perf_counter()
 
         self.metrics.observe_bucket(
-            cells_real=int(sum(int(n) ** 2 for n in n_real)),
-            cells_padded=sig.bucket_B * n_pad * n_pad,
+            cells_real=int(cells_real), cells_padded=int(cells_padded)
         )
         for slot, job in enumerate(group):
-            n = job.matrix.shape[0]
-            upto = merge_prefix(n, cfg.stop_at_k, n_merges[slot])
+            n = job.n
+            if sig.algorithm == "nnchain":
+                if int(n_merges[slot]) != n - 1:
+                    self._finish(job, error=RuntimeError(
+                        "NN-chain loop hit its iteration cap before "
+                        "finishing — the input likely contains NaNs (the "
+                        "chain invariant needs a total order on distances)"
+                    ))
+                    continue
+                m = dg.truncate_canonical(
+                    dg.canonical_order(merges[slot, : n - 1], n=n),
+                    n, cfg.stop_at_k, cfg.distance_threshold,
+                )
+            else:
+                upto = merge_prefix(n, cfg.stop_at_k, n_merges[slot])
+                m = merges[slot, :upto]
             result = ClusterResult(
-                merges=merges[slot, :upto],
+                merges=m,
                 method=cfg.method,
                 backend=cfg.engine,
+                algorithm=sig.algorithm,
                 n_leaves=n,
                 points=job.points,
                 distances=job.matrix,

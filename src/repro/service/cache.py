@@ -67,12 +67,28 @@ def _compile(sig: BucketSignature) -> Callable:
 
     Abstract shapes only (``ShapeDtypeStruct``) — warming a bucket does
     not allocate or run a dummy batch.  The returned executable takes
-    ``(Db, n_real, threshold)`` concrete arrays and returns the engine's
-    ``LWResult``.
+    ``(Db, n_real, threshold)`` concrete arrays — ``(Xb, n_real,
+    threshold)`` for a matrix-free NN-chain bucket (``points_dim > 0``) —
+    and returns the engine's result struct.
     """
-    Db = jax.ShapeDtypeStruct((sig.bucket_B, sig.bucket_n, sig.bucket_n), jnp.float32)
     nr = jax.ShapeDtypeStruct((sig.bucket_B,), jnp.int32)
     thr = jax.ShapeDtypeStruct((), jnp.float32)
+    if sig.algorithm == "nnchain":
+        # canonicalized signature: full trip count, threshold operand
+        # accepted-and-ignored, early stop applied post-hoc by the caller
+        from repro.core import nnchain
+
+        statics = dict(method=sig.method, n_steps=sig.n_steps)
+        if sig.points_dim:
+            Xb = jax.ShapeDtypeStruct(
+                (sig.bucket_B, sig.bucket_n, sig.points_dim), jnp.float32
+            )
+            return nnchain._run_points_batch.lower(Xb, nr, thr, **statics).compile()
+        Db = jax.ShapeDtypeStruct(
+            (sig.bucket_B, sig.bucket_n, sig.bucket_n), jnp.float32
+        )
+        return nnchain._run_batch.lower(Db, nr, thr, **statics).compile()
+    Db = jax.ShapeDtypeStruct((sig.bucket_B, sig.bucket_n, sig.bucket_n), jnp.float32)
     statics = dict(
         method=sig.method,
         n_steps=sig.n_steps,
@@ -160,6 +176,8 @@ def warmup_signatures(
     with_threshold: bool = False,
     max_batch: int = 1,
     compaction: bool | str = "auto",
+    algorithm: str = "lw",
+    points_dim: int = 0,
 ) -> list[BucketSignature]:
     """The declarative warmup list for a traffic mix.
 
@@ -177,6 +195,14 @@ def warmup_signatures(
     request on a warmed service performs no compile.  Buckets below the
     first stage boundary canonicalize to ``compaction=False`` and share
     the single-stage executable.
+
+    ``algorithm``/``points_dim`` likewise pass through
+    :func:`~repro.core.batched.bucket_signature`'s per-bucket resolution:
+    a bucket that resolves to NN-chain canonicalizes (full trip count,
+    no threshold structure), so its one executable covers every
+    early-stop knob combination; buckets that resolve back to LW under
+    ``"auto"`` produce the plain LW signatures and de-duplicate against
+    a matrix-traffic warmup through the cache key.
     """
     for n in bucket_ns:
         if n not in BUCKETS:
@@ -198,6 +224,8 @@ def warmup_signatures(
                     stop_at_k=stop_at_k,
                     with_threshold=with_threshold,
                     compaction=compaction,
+                    algorithm=algorithm,
+                    points_dim=points_dim,
                 )
             )
             B *= 2
@@ -214,12 +242,14 @@ def engine_jit_cache_size() -> int:
     through ``jax.jit``'s implicit path, which ``CompileCache.stats``
     alone could not see).
     """
-    from repro.core import batched
+    from repro.core import batched, nnchain
     from repro.kernels import ops
 
     fns = (
         batched._run_vmap,
         batched._run_sharded,
+        nnchain._run_batch,
+        nnchain._run_points_batch,
         ops._kernelized_run,
         ops._kernelized_batch_run,
     )

@@ -61,6 +61,7 @@ def run_load(
     seed: int = 0,
     dim: int = 8,
     pool: int = 64,
+    as_points: bool = False,
 ) -> tuple[list[Future], float, bool]:
     """Open-loop Poisson arrivals of ragged problems.
 
@@ -70,11 +71,24 @@ def run_load(
     real problem sizes to draw from (they need not be bucket-aligned —
     the batcher rounds them up); a ``pool`` of matrices is generated up
     front so the arrival loop does no problem-building work of its own.
+
+    ``as_points=True`` submits raw ``(n, dim)`` point sets under the
+    service method's default metric instead of pre-built matrices — the
+    traffic shape that exercises the matrix-free NN-chain buckets (the
+    matrix build then happens on the submit path for LW buckets and
+    never for nnchain buckets, so the A/B is end-to-end honest).
     """
     rng = np.random.default_rng(seed)
-    problems = [
-        synthetic_problem(rng, int(rng.choice(sizes)), dim) for _ in range(pool)
-    ]
+    if as_points:
+        problems = [
+            rng.normal(size=(int(rng.choice(sizes)), dim)).astype(np.float32)
+            for _ in range(pool)
+        ]
+    else:
+        problems = [
+            synthetic_problem(rng, int(rng.choice(sizes)), dim)
+            for _ in range(pool)
+        ]
     futures: list[Future] = []
     t0 = time.perf_counter()
     deadline = t0 + duration_s
@@ -89,7 +103,10 @@ def run_load(
         # is_distance=True skips the O(n²) square-input ambiguity check —
         # the cheap disambiguation the service path exists to use
         futures.append(
-            service.submit(problems[len(futures) % pool], is_distance=True)
+            service.submit(
+                problems[len(futures) % pool],
+                is_distance=False if as_points else True,
+            )
         )
         t_next += rng.exponential(1.0 / rate_hz)
     drained = service.flush(timeout=120.0)
@@ -104,6 +121,8 @@ def drive(
     sizes: tuple[int, ...],
     seed: int = 0,
     warmup: bool = True,
+    dim: int = 8,
+    as_points: bool = False,
 ) -> LoadReport:
     """Warm a fresh service, run one timed open-loop load, close it."""
     with ClusteringService(config) as service:
@@ -116,6 +135,8 @@ def drive(
             duration_s=duration_s,
             sizes=sizes,
             seed=seed,
+            dim=dim,
+            as_points=as_points,
         )
         # only inspect resolved futures — under saturation some are still
         # pending and a bare f.exception() would block the driver forever
@@ -167,6 +188,13 @@ def main(argv: list[str] | None = None) -> LoadReport:
     ap.add_argument("--method", default="complete")
     ap.add_argument("--engine", default="serial", choices=("serial", "kernel"))
     ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--algorithm", default="auto",
+                    choices=("auto", "lw", "nnchain"))
+    ap.add_argument("--points", action="store_true",
+                    help="submit (n, dim) point sets instead of matrices "
+                         "(exercises the matrix-free nnchain buckets)")
+    ap.add_argument("--dim", type=int, default=8,
+                    help="embedding dim of the synthetic points")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
     ap.add_argument("--buckets", default="8,16,32",
@@ -182,6 +210,8 @@ def main(argv: list[str] | None = None) -> LoadReport:
         method=args.method,
         engine=args.engine,
         variant=args.variant,
+        algorithm=args.algorithm,
+        points_dim=args.dim if args.points else None,
         max_batch=args.max_batch,
         max_delay_ms=args.max_delay_ms,
         bucket_ns=tuple(int(b) for b in args.buckets.split(",")),
@@ -193,6 +223,8 @@ def main(argv: list[str] | None = None) -> LoadReport:
         sizes=tuple(int(s) for s in args.sizes.split(",")),
         seed=args.seed,
         warmup=not args.no_warmup,
+        dim=args.dim,
+        as_points=args.points,
     )
     print_report(report)
     return report

@@ -1,0 +1,334 @@
+"""Batched NN-chain: the cross-engine equivalence matrix (DESIGN.md §11).
+
+The batched chain (`nn_chain_batched` / `nn_chain_batched_from_points`)
+vmaps the serial chain loop across a shape bucket, freezing finished
+lanes the way the LW ``distance_threshold`` loop does.  Its contract:
+every lane's canonical-ordered merges equal the *serial* chain's for
+that lane's problem bit-for-bit on indices (the chain walk is
+deterministic; vmap must not perturb it), and equal the serial LW
+loop's on tie-free input with heights to float tolerance.  This file
+pins that matrix — all reducible methods × ragged buckets × size-1
+lanes × matrix-free points mode — plus the scheduler routing
+(``cluster_batch(algorithm=...)``) and the early-stop canonical-prefix
+contract, including the threshold-exactly-on-a-merge boundary.
+
+The frozen-lane property test at the bottom needs the optional
+``hypothesis`` dependency (guarded import, ``test_properties.py``
+convention).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import cluster, cluster_batch
+from repro.core import dendrogram as dg
+from repro.core.batched import bucket_n, bucket_signature, cluster_batch_merges
+from repro.core.lance_williams import lance_williams
+from repro.core.nnchain import (
+    NNCHAIN_BATCH_AUTO_MIN_N,
+    POINTS_METHODS,
+    REDUCIBLE_METHODS,
+    nn_chain,
+    nn_chain_batched,
+    nn_chain_batched_from_points,
+    nn_chain_from_points,
+    resolve_batch_algorithm,
+)
+from tests.conftest import random_distance_matrix
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+RAGGED_NS = (16, 11, 7, 2, 1)      # ragged lanes incl. a size-1 problem
+
+
+def _pack_dense(mats, n_pad):
+    Db = np.zeros((len(mats), n_pad, n_pad), np.float32)
+    for b, m in enumerate(mats):
+        Db[b, : m.shape[0], : m.shape[0]] = m
+    return Db, np.array([m.shape[0] for m in mats], np.int32)
+
+
+def _pack_points(pts, n_pad, dim):
+    Xb = np.zeros((len(pts), n_pad, dim), np.float32)
+    for b, X in enumerate(pts):
+        Xb[b, : X.shape[0]] = X
+    return Xb, np.array([X.shape[0] for X in pts], np.int32)
+
+
+def _assert_same_tree(got, want, n, rtol=1e-5, atol=1e-6):
+    got, want = np.asarray(got), np.asarray(want)
+    assert got.shape == want.shape
+    assert np.array_equal(got[:, [0, 1, 3]], want[:, [0, 1, 3]])
+    np.testing.assert_allclose(got[:, 2], want[:, 2], rtol=rtol, atol=atol)
+    assert dg.merges_equivalent(got, want, n=n)
+
+
+# ---------------------------------------------------------------------------
+# engine level: batched lanes vs serial chain vs serial LW
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", REDUCIBLE_METHODS)
+def test_batched_dense_equivalence_matrix(rng, method):
+    """Every ragged lane (incl. size-1) matches the serial chain
+    bit-for-bit and the LW loop canonically."""
+    mats = [
+        random_distance_matrix(rng, n, squared=method == "ward")
+        for n in RAGGED_NS
+    ]
+    Db, n_real = _pack_dense(mats, 16)
+    res = nn_chain_batched(Db, n_real, method)
+    merges = np.asarray(res.merges)
+    n_merges = np.asarray(res.n_merges)
+    for b, (m, n) in enumerate(zip(mats, RAGGED_NS)):
+        assert n_merges[b] == n - 1
+        if n < 2:
+            continue
+        lane = merges[b, : n - 1]
+        # vmap must not perturb the chain walk: raw chain order matches
+        # the serial engine exactly, heights included
+        serial = np.asarray(nn_chain(m, method).merges)
+        np.testing.assert_array_equal(lane, serial)
+        # and canonically the LW loop's tree
+        lw = np.asarray(lance_williams(m, method=method).merges)
+        _assert_same_tree(dg.canonical_order(lane, n=n), lw, n)
+
+
+@pytest.mark.parametrize("method", sorted(POINTS_METHODS))
+def test_batched_points_equivalence_matrix(rng, method):
+    """Matrix-free lanes: batched == serial points chain == LW on the
+    squared-Euclidean matrix."""
+    ns = (13, 9, 2)
+    pts = [rng.normal(size=(n, 3)).astype(np.float32) for n in ns]
+    Xb, n_real = _pack_points(pts, 16, 3)
+    res = nn_chain_batched_from_points(Xb, n_real, method)
+    merges = np.asarray(res.merges)
+    assert np.array_equal(np.asarray(res.n_merges), [n - 1 for n in ns])
+    for b, (X, n) in enumerate(zip(pts, ns)):
+        lane = merges[b, : n - 1]
+        serial = np.asarray(nn_chain_from_points(X, method).merges)
+        np.testing.assert_array_equal(lane, serial)
+        D = ((X[:, None, :] - X[None, :, :]) ** 2).sum(-1)
+        lw = np.asarray(lance_williams(D, method=method).merges)
+        _assert_same_tree(dg.canonical_order(lane, n=n), lw, n,
+                          rtol=1e-4, atol=1e-4)
+
+
+def test_batched_degenerate_lanes(rng):
+    """Size-1 and padded (size-0) lanes are frozen from step one: zero
+    merges, no contamination of live lanes."""
+    m = random_distance_matrix(rng, 6)
+    Db, _ = _pack_dense([m, np.zeros((1, 1)), np.zeros((0, 0))], 8)
+    res = nn_chain_batched(Db, np.array([6, 1, 0], np.int32), "average")
+    n_merges = np.asarray(res.n_merges)
+    assert list(n_merges) == [5, 0, 0]
+    np.testing.assert_array_equal(
+        np.asarray(res.merges)[0, :5], np.asarray(nn_chain(m, "average").merges)
+    )
+
+
+def test_batched_rejects_bad_inputs(rng):
+    with pytest.raises(ValueError, match="reducible"):
+        nn_chain_batched(np.zeros((1, 4, 4), np.float32), [4], "centroid")
+    with pytest.raises(ValueError, match="points mode"):
+        nn_chain_batched_from_points(np.zeros((1, 4, 2), np.float32),
+                                     [4], "complete")
+
+
+# ---------------------------------------------------------------------------
+# scheduler routing: cluster_batch(algorithm=...)
+# ---------------------------------------------------------------------------
+
+
+def test_auto_routes_large_points_buckets_to_nnchain(rng):
+    """The measured policy: matrix-free buckets of
+    NNCHAIN_BATCH_AUTO_MIN_N or larger go nnchain, dense buckets and
+    small points buckets stay LW."""
+    big = NNCHAIN_BATCH_AUTO_MIN_N + 6
+    pts = [rng.normal(size=(n, 4)).astype(np.float32) for n in (big, 9)]
+    br = cluster_batch(pts, "ward")
+    algos = dict(br.stats.bucket_algorithms)
+    assert algos[bucket_n(big)] == "nnchain"
+    assert algos[bucket_n(9)] == "lw"
+    assert [r.algorithm for r in br.results] == ["nnchain", "lw"]
+    for X, r in zip(pts, br.results):
+        want = cluster(X, "ward", algorithm="lw", backend="serial")
+        assert dg.merges_equivalent(r.merges, want.merges, n=X.shape[0])
+        np.testing.assert_array_equal(r.merges[:, :2], want.merges[:, :2])
+
+    # dense traffic of the same size never auto-routes: matrices carry no
+    # points capability, and bit-identity with pinned LW must hold
+    mats = [random_distance_matrix(rng, big).astype(np.float32)]
+    br_auto = cluster_batch(mats, "complete")
+    br_lw = cluster_batch(mats, "complete", algorithm="lw")
+    assert dict(br_auto.stats.bucket_algorithms).popitem()[1] == "lw"
+    np.testing.assert_array_equal(br_auto[0].merges, br_lw[0].merges)
+
+
+def test_explicit_nnchain_dense_buckets(rng):
+    mats = [
+        random_distance_matrix(rng, n).astype(np.float32) for n in (14, 6, 3)
+    ]
+    br = cluster_batch(mats, "complete", algorithm="nnchain")
+    assert all(a == "nnchain" for _, a in br.stats.bucket_algorithms)
+    for m, r in zip(mats, br.results):
+        want = cluster(m, "complete", algorithm="lw", backend="serial")
+        _assert_same_tree(r.merges, want.merges, m.shape[0])
+        assert dg.is_monotone(r.merges)      # canonicalized output
+
+
+def test_nnchain_flag_validation(rng):
+    m = random_distance_matrix(rng, 6).astype(np.float32)
+    with pytest.raises(ValueError, match="reducible"):
+        cluster_batch([m], "centroid", algorithm="nnchain")
+    with pytest.raises(ValueError, match="serial"):
+        cluster_batch([m], "complete", algorithm="nnchain", backend="kernel")
+    with pytest.raises(ValueError, match="algorithm"):
+        cluster_batch([m], "complete", algorithm="fastest")
+    # "auto" quietly keeps LW for the non-reducible methods
+    assert cluster_batch([m], "centroid")[0].algorithm == "lw"
+
+
+def test_resolve_batch_algorithm_policy():
+    kw = dict(method="ward", engine="serial")
+    assert resolve_batch_algorithm(
+        "auto", bucket_n=64, points_capable=True, **kw) == "nnchain"
+    assert resolve_batch_algorithm(
+        "auto", bucket_n=32, points_capable=True, **kw) == "lw"
+    assert resolve_batch_algorithm(
+        "auto", bucket_n=256, points_capable=False, **kw) == "lw"
+    assert resolve_batch_algorithm(
+        "auto", bucket_n=256, points_capable=True, variant="rowmin",
+        **kw) == "lw"
+    assert resolve_batch_algorithm(
+        "nnchain", bucket_n=8, points_capable=False, **kw) == "nnchain"
+    assert resolve_batch_algorithm(
+        "lw", bucket_n=4096, points_capable=True, **kw) == "lw"
+
+
+def test_nnchain_signature_canonicalization():
+    """One nnchain executable serves every early-stop knob combination;
+    LW and nnchain signatures can never collide."""
+    kw = dict(method="ward", engine="serial", algorithm="nnchain")
+    base = bucket_signature(20, 3, **kw)
+    assert (base.algorithm, base.n_steps, base.with_threshold) == (
+        "nnchain", base.bucket_n - 1, False)
+    assert bucket_signature(20, 3, stop_at_k=5, with_threshold=True, **kw) == base
+    lw = bucket_signature(20, 3, method="ward", engine="serial")
+    assert lw != base and lw.algorithm == "lw"
+    pts = bucket_signature(20, 3, points_dim=4, **kw)
+    assert pts != base and pts.points_dim == 4
+
+
+def test_matrix_free_bucket_never_builds_matrices(rng):
+    """The points path's accounting is O(n·d): cells_real/padded count
+    point-set cells for nnchain buckets, matrix cells for LW buckets."""
+    big = NNCHAIN_BATCH_AUTO_MIN_N
+    pts = [rng.normal(size=(big, 4)).astype(np.float32)]
+    merge_lists, stats = cluster_batch_merges(
+        [None], "ward", algorithm="auto", points=pts)
+    assert stats.cells_real == big * 4
+    assert stats.cells_padded == bucket_signature(
+        big, 1, method="ward").bucket_n * 4
+    assert len(merge_lists[0]) == big - 1
+
+
+# ---------------------------------------------------------------------------
+# early stop: canonical-prefix contract, incl. the boundary case
+# ---------------------------------------------------------------------------
+
+
+def _chain_matrix():
+    """Single-linkage ladder with *integer* merge heights 1, 2, 3, 4 —
+    exact in float32, so a threshold can land exactly ON a mutual-NN
+    merge with no float ambiguity."""
+    pos = np.array([0.0, 1.0, 3.0, 6.0, 10.0])
+    return np.abs(pos[:, None] - pos[None, :]).astype(np.float32)
+
+
+@pytest.mark.parametrize("threshold,want_merges", [
+    (0.5, 0),    # below every merge
+    (1.0, 1),    # exactly ON the first mutual-NN merge: inclusive (<=)
+    (2.0, 2),    # exactly ON a later merge
+    (2.5, 2),    # between heights
+    (4.0, 4),    # exactly on the last merge: full tree
+])
+def test_threshold_boundary_on_mutual_nn_merge(threshold, want_merges):
+    D = _chain_matrix()
+    want = cluster(D, "single", algorithm="lw", backend="serial",
+                   distance_threshold=threshold)
+    assert want.n_merges == want_merges    # pin the LW semantics first
+    br = cluster_batch([D], "single", algorithm="nnchain",
+                       distance_threshold=threshold)
+    np.testing.assert_array_equal(br[0].merges, want.merges)
+
+
+def test_stop_knobs_match_serial_posthoc(rng):
+    """stop_at_k / distance_threshold on batched nnchain lanes == the
+    serial engine's post-hoc canonical truncation, per lane."""
+    pts = [rng.normal(size=(n, 4)).astype(np.float32)
+           for n in (NNCHAIN_BATCH_AUTO_MIN_N + 9, NNCHAIN_BATCH_AUTO_MIN_N)]
+    for kw in (dict(stop_at_k=7), dict(distance_threshold=5.0),
+               dict(stop_at_k=3, distance_threshold=5.0)):
+        br = cluster_batch(pts, "ward", **kw)
+        for X, r in zip(pts, br.results):
+            assert r.algorithm == "nnchain"
+            # vmapped vs serial points programs agree on the tree and the
+            # truncation point; heights only to float tolerance (XLA
+            # fuses the two programs differently)
+            want = cluster(X, "ward", algorithm="nnchain",
+                           backend="serial", **kw)
+            assert r.n_merges == want.n_merges
+            assert dg.merges_equivalent(r.merges, want.merges, n=X.shape[0])
+            lw = cluster(X, "ward", algorithm="lw", backend="serial", **kw)
+            assert r.n_merges == lw.n_merges
+
+
+# ---------------------------------------------------------------------------
+# frozen-lane property (hypothesis)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def ragged_point_batches(draw):
+        sizes = draw(
+            st.lists(st.integers(2, 24), min_size=2, max_size=4)
+        )
+        dim = draw(st.integers(2, 4))
+        seed = draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        return [rng.normal(size=(n, dim)).astype(np.float32) for n in sizes]
+
+    @settings(max_examples=15, deadline=None)
+    @given(ragged_point_batches())
+    def test_frozen_lane_invariant(pts):
+        """Lanes finish at different chain steps; a finished lane must
+        freeze — every lane's merges are canonically identical to its
+        own serial run, regardless of how long its neighbors keep
+        looping."""
+        n_pad = max(X.shape[0] for X in pts)
+        dim = pts[0].shape[1]
+        Xb = np.zeros((len(pts), n_pad, dim), np.float32)
+        for b, X in enumerate(pts):
+            Xb[b, : X.shape[0]] = X
+        n_real = np.array([X.shape[0] for X in pts], np.int32)
+        res = nn_chain_batched_from_points(Xb, n_real, "ward")
+        merges = np.asarray(res.merges)
+        for b, X in enumerate(pts):
+            n = X.shape[0]
+            assert np.asarray(res.n_merges)[b] == n - 1
+            lane = dg.canonical_order(merges[b, : n - 1], n=n)
+            serial = dg.canonical_order(
+                np.asarray(nn_chain_from_points(X, "ward").merges), n=n
+            )
+            np.testing.assert_array_equal(
+                lane[:, [0, 1, 3]], serial[:, [0, 1, 3]]
+            )
+            np.testing.assert_allclose(lane[:, 2], serial[:, 2],
+                                       rtol=1e-5, atol=1e-6)

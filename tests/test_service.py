@@ -106,6 +106,100 @@ def test_zero_recompiles_compacted_buckets(rng):
             np.testing.assert_array_equal(res.merges, want.merges)
 
 
+def test_zero_recompiles_nnchain_buckets(rng):
+    """Warmup must cover the matrix-free NN-chain signatures: with
+    ``points_dim`` declared, the FIRST nnchain bucket on a warmed
+    service performs no compile (AOT counter and implicit jit caches —
+    which now include the nnchain entry points — both flat)."""
+    cfg = ServiceConfig(method="ward", algorithm="auto", points_dim=4,
+                        bucket_ns=(64, 128), max_batch=2, max_delay_ms=1.0)
+    with ClusteringService(cfg) as svc:
+        warmed = svc.warmup()
+        # 2 buckets × batch paddings {1, 2} × {dense LW, points nnchain}
+        assert warmed == 8
+        sigs = svc.cache.signatures()
+        assert {s.algorithm for s in sigs} == {"lw", "nnchain"}
+        assert all(s.points_dim == 4 for s in sigs if s.algorithm == "nnchain")
+        compiles0 = svc.cache.stats.compiles
+        jit0 = engine_jit_cache_size()
+
+        pts = [
+            rng.normal(size=(n, 4)).astype(np.float32)
+            for n in (70, 128, 64, 100)
+        ]
+        results = _resolve_all([svc.submit(p) for p in pts])
+
+        assert svc.cache.stats.compiles == compiles0, (
+            "first nnchain bucket compiled — warmup missed its signature"
+        )
+        assert engine_jit_cache_size() == jit0, "implicit jit path compiled"
+        from repro.core import dendrogram as dg
+
+        for res, X in zip(results, pts):
+            assert res.algorithm == "nnchain"
+            assert res.distances is None       # matrix-free: never built
+            want = cluster(X, "ward", algorithm="lw", backend="serial")
+            assert dg.merges_equivalent(res.merges, want.merges, n=X.shape[0])
+
+
+def test_mixed_lw_nnchain_traffic_no_collisions(rng):
+    """LW and nnchain buckets coexisting in ONE micro-batch window must
+    dispatch through distinct BucketSignatures (no cache-key collision:
+    a dense executable must never serve a points bucket or vice versa),
+    and every request still matches its single-problem reference."""
+    cfg = ServiceConfig(method="ward", algorithm="auto", points_dim=3,
+                        bucket_ns=(8, 64), max_batch=8, max_delay_ms=50.0)
+    with ClusteringService(cfg) as svc:
+        svc.warmup()
+        X_big = rng.normal(size=(64, 3)).astype(np.float32)    # nnchain bucket
+        X_small = rng.normal(size=(6, 3)).astype(np.float32)   # LW dense bucket
+        mat = random_distance_matrix(rng, 7, squared=True).astype(np.float32)
+        # one window: the 50 ms delay holds all three for a single batch
+        futs = [
+            svc.submit(X_big),
+            svc.submit(X_small),
+            svc.submit(mat, is_distance=True),
+        ]
+        res_big, res_small, res_mat = _resolve_all(futs)
+        snap = svc.metrics.snapshot(svc.cache)
+        assert snap.n_batches == 2, "expected one nnchain + one LW bucket"
+
+        sigs = svc.cache.signatures()
+        assert len(set(sigs)) == len(sigs)
+        hit = [s for s in sigs if s.bucket_n == 64 and s.algorithm == "nnchain"]
+        assert hit and all(s.points_dim == 3 for s in hit)
+
+        from repro.core import dendrogram as dg
+
+        assert res_big.algorithm == "nnchain"
+        want = cluster(X_big, "ward", algorithm="lw", backend="serial")
+        assert dg.merges_equivalent(res_big.merges, want.merges, n=64)
+        # LW jobs keep the bit-identity contract
+        assert res_small.algorithm == "lw" and res_mat.algorithm == "lw"
+        np.testing.assert_array_equal(
+            res_small.merges,
+            cluster(X_small, "ward", algorithm="lw", backend="serial").merges,
+        )
+        np.testing.assert_array_equal(
+            res_mat.merges,
+            cluster(mat, "ward", algorithm="lw", backend="serial",
+                    is_distance=True).merges,
+        )
+
+
+def test_service_config_nnchain_validation():
+    with pytest.raises(ValueError, match="reducible"):
+        ServiceConfig(method="centroid", algorithm="nnchain")
+    with pytest.raises(ValueError, match="serial"):
+        ServiceConfig(engine="kernel", algorithm="nnchain")
+    with pytest.raises(ValueError, match="algorithm"):
+        ServiceConfig(algorithm="fastest")
+    with pytest.raises(ValueError, match="points_dim"):
+        ServiceConfig(points_dim=0)
+    # kernel engine composes fine with "auto" (it just resolves to LW)
+    ServiceConfig(engine="kernel", algorithm="auto")
+
+
 def test_batcher_matches_single_problem_with_knobs(rng):
     cfg = ServiceConfig(
         method="average",
