@@ -68,14 +68,20 @@ def main(n: int = 1968, procs=(1, 2, 4, 8, 16)):
     rows, failures = run(n, procs)
     if rows:
         # the reduction baseline is the p=1 probe; if it failed, fall back
-        # to the smallest surviving p and say so in the header
+        # to the smallest surviving p and say so in the header.  Rows
+        # follow the runner's ``name,us_per_call,derived`` convention
+        # (``run.py --json``): storage probes have no timing, so the
+        # numeric field carries the per-device byte count and the name
+        # says so.
         base_row = min(rows, key=lambda r: r["p"])
         base = base_row["bytes_per_device"]
         base_name = ("serial" if base_row["p"] == 1
                      else f"p{base_row['p']}")
-        print(f"p,bytes_per_device,reduction_vs_{base_name}")
+        print("name,us_per_call,derived")
         for r in rows:
-            print(f"{r['p']},{r['bytes_per_device']},"
+            print(f"storage_bytes_per_device_p{r['p']},"
+                  f"{r['bytes_per_device']},"
+                  f"n={n};reduction_vs_{base_name}="
                   f"{base / r['bytes_per_device']:.2f}x")
     if failures:
         raise RuntimeError(

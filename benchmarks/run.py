@@ -8,6 +8,7 @@ Paper artifact → bench mapping:
   beyond-paper engine (rowmin)         → bench_variants
   unified engine variant×early-stop    → bench_engine
   O(n²) nnchain engine + points mode   → bench_nnchain (EXPERIMENTS §Perf-5)
+  sharded matrix-free chain + twophase → bench_distributed (EXPERIMENTS §Perf-7)
   kernel hot-spots                     → bench_kernels
   batched multi-problem engine         → bench_batch (EXPERIMENTS.md §Batch)
   online serving layer (DESIGN.md §10) → bench_service (EXPERIMENTS.md §Service)
@@ -88,6 +89,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_batch,
+        bench_distributed,
         bench_engine,
         bench_kernels,
         bench_linkage,
@@ -121,6 +123,8 @@ def main() -> None:
         "scaling": lambda: bench_scaling.main(
             n=n_scale, procs=(1, 2, 4, 8) if not args.paper
             else (1, 2, 4, 8, 16)),
+        "distributed": lambda: bench_distributed.main(
+            smoke=smoke, paper=args.paper),
         "roofline": roofline_report.main,
     }
     failed = []

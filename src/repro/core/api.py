@@ -42,7 +42,7 @@ from repro.core.nnchain import (
 )
 
 Backend = Literal["auto", "serial", "distributed", "kernel"]
-Algorithm = Literal["auto", "lw", "nnchain"]
+Algorithm = Literal["auto", "lw", "nnchain", "twophase"]
 
 
 @dataclass
@@ -247,10 +247,22 @@ def cluster(
       O(n²) *total* work.  Single-device; merges are canonicalized to
       height order (:func:`repro.core.dendrogram.canonical_order`), so
       the result matches the LW engine's on tie-free input.
+    * ``"twophase"``: the explicitly **approximate** distributed tier
+      (:func:`repro.core.distributed.two_phase_from_points`): shard the
+      points into contiguous blocks, chain-cluster each block locally,
+      truncate at an intermediate level, agglomerate the surviving
+      geometric summaries globally.  Points input with a
+      :data:`repro.core.nnchain.POINTS_METHODS` method under its
+      squared-Euclidean convention only.  No merge can cross shards
+      below the truncation level — the dendrogram-quality delta is
+      *measured* (merge-set agreement, EXPERIMENTS.md §Perf-7), not
+      assumed; reach for it only when the exact engines' per-step
+      collectives are the bottleneck.
     * ``"auto"`` (default): nnchain for large reducible problems on the
       serial path (``n ≥`` :data:`repro.core.nnchain.NNCHAIN_AUTO_MIN_N`
       with default ``variant``/``compaction``), LW otherwise — the
-      distributed/kernel backends always keep LW, and batched/service
+      distributed/kernel backends always keep LW under ``auto``
+      (the sharded chain is explicit opt-in), and batched/service
       traffic keeps LW for dense buckets while routing *matrix-free*
       points buckets of at least
       :data:`repro.core.nnchain.NNCHAIN_BATCH_AUTO_MIN_N` to the batched
@@ -260,9 +272,20 @@ def cluster(
       dendrogram; pin ``algorithm="lw"`` where bit-compatibility with
       the LW loop's row-major tie-breaking matters.
 
-    **backend** (LW only) — execution wrapper: ``serial`` (one device),
-    ``distributed`` (paper's row-sharded algorithm over the mesh),
-    ``kernel`` (Pallas inner ops), ``auto`` (distributed iff >1 device).
+    **backend** — execution wrapper: ``serial`` (one device),
+    ``distributed`` (over the mesh), ``kernel`` (Pallas inner ops, LW
+    only), ``auto`` (distributed iff >1 device for LW; serial for an
+    explicit nnchain/twophase).  ``backend="distributed"`` composes with
+    both algorithms: LW runs the paper's row-sharded merge loop on the
+    dense matrix (O(n²/p) per device); nnchain runs the **sharded
+    matrix-free chain**
+    (:func:`repro.core.distributed.distributed_nn_chain_from_points`,
+    DESIGN.md §12) — ``(n, d)`` points block-row sharded, O(n·d/p + n)
+    per device, three O(d)/O(p) collectives per chain trip, merges
+    identical to the serial chain.  The sharded chain *requires* the
+    matrix-free capability (points input, geometric-summary method,
+    squared-Euclidean metric); ``matrix_free=False`` contradicts it and
+    raises.
 
     **variant** (LW only) — argmin primitive on any backend:
     ``baseline`` (full masked scan), ``rowmin`` (cached row minima),
@@ -325,25 +348,67 @@ def cluster(
     if matrix_free not in (None, "auto"):
         matrix_free = bool(matrix_free)   # membership passed 0/1: same as bool
     if matrix_free is True:
-        # matrix-free is an nnchain capability: an explicit request makes
-        # "auto" mean nnchain, and an explicit "lw" is a contradiction —
-        # never silently build the (n, n) matrix the caller opted out of
+        # matrix-free is an nnchain-family capability: an explicit request
+        # makes "auto" mean nnchain, and an explicit "lw" is a
+        # contradiction — never silently build the (n, n) matrix the
+        # caller opted out of.  An explicit nnchain/twophase already
+        # names a matrix-free-capable engine and stands.
         if algorithm == "lw":
             raise ValueError(
                 "matrix_free=True requires the NN-chain engine, but "
                 "algorithm='lw' pins the Lance-Williams loop (every LW "
                 "backend stores the dense matrix)"
             )
-        algorithm = "nnchain"
+        if algorithm == "auto":
+            algorithm = "nnchain"
 
     if backend == "auto":
-        # an explicit nnchain request owns the backend choice: it is a
-        # single-device engine, so "auto" must not hand it a multi-device
-        # mesh it would then have to reject
+        # an explicit nnchain/twophase request owns the backend choice:
+        # their default composition is the serial chain, so "auto" must
+        # not hand them a multi-device mesh they did not ask for (the
+        # sharded chain is explicit backend="distributed" opt-in)
         backend = (
-            "serial" if algorithm == "nnchain"
+            "serial" if algorithm in ("nnchain", "twophase")
             else "distributed" if len(jax.devices()) > 1
             else "serial"
+        )
+
+    points_capable = (
+        points is not None and points.ndim == 2
+        and method in POINTS_METHODS and used_metric == "sqeuclidean"
+    )
+
+    if algorithm == "twophase":
+        if not points_capable:
+            raise ValueError(
+                "algorithm='twophase' shards points and agglomerates "
+                "geometric summaries: it needs (n, d) points input and a "
+                f"method from {POINTS_METHODS} under the squared-"
+                f"Euclidean convention; got method={method!r}, "
+                f"metric={used_metric!r}, "
+                f"input shape {None if points is None else points.shape}"
+            )
+        if backend not in ("serial", "distributed"):
+            raise ValueError(
+                f"algorithm='twophase' supports backend='serial'/"
+                f"'distributed', got {backend!r}"
+            )
+        from repro.core.distributed import two_phase_from_points
+
+        res = two_phase_from_points(points, method)
+        # heights are already monotone-repaired + canonical: only truncate
+        merges = dg.truncate_canonical(
+            np.asarray(res.merges), n, stop_at_k, distance_threshold
+        )
+        return ClusterResult(
+            merges=merges,
+            method=method,
+            backend=backend,
+            algorithm="twophase",
+            n_leaves=n,
+            points=points if keep_inputs else None,
+            distances=None,
+            metric=used_metric,
         )
 
     algorithm = resolve_algorithm(
@@ -352,18 +417,42 @@ def cluster(
     )
 
     if algorithm == "nnchain":
-        use_points = resolve_matrix_free(
-            matrix_free,
-            points_shape=None if points is None else points.shape,
-            method=method, metric=used_metric, n=n,
-        )
-        if use_points:
-            res = nn_chain_from_points(points, method)
-            D = None                    # never materialized — keep it that way
+        if backend == "distributed":
+            # the sharded matrix-free chain (DESIGN.md §12) is the ONLY
+            # distributed chain composition — it needs the points
+            # capability, and matrix_free=False contradicts it
+            if matrix_free is False or not points_capable:
+                raise ValueError(
+                    "backend='distributed' with algorithm='nnchain' is "
+                    "the sharded matrix-free chain: it needs (n, d) "
+                    f"points input, a method from {POINTS_METHODS} under "
+                    "the squared-Euclidean convention, and matrix_free "
+                    f"left on (got method={method!r}, "
+                    f"metric={used_metric!r}, matrix_free={matrix_free!r}, "
+                    f"input shape "
+                    f"{None if points is None else points.shape}) — use "
+                    "algorithm='lw' for the dense row-sharded engine"
+                )
+            from repro.core.distributed import (
+                distributed_nn_chain_from_points,
+            )
+
+            res = distributed_nn_chain_from_points(points, method, mesh=mesh)
+            D = None
         else:
-            if points is not None:
-                D = build_distance_matrix(points, used_metric)
-            res = nn_chain(D, method)
+            use_points = resolve_matrix_free(
+                matrix_free,
+                points_shape=None if points is None else points.shape,
+                method=method, metric=used_metric, n=n,
+            )
+            if use_points:
+                res = nn_chain_from_points(points, method)
+                D = None                # never materialized — keep it that way
+            else:
+                if points is not None:
+                    D = build_distance_matrix(points, used_metric)
+                res = nn_chain(D, method)
+            backend = "serial"
         if n > 1 and int(res.n_merges) != n - 1:
             raise RuntimeError(
                 "NN-chain loop hit its iteration cap before finishing — "
@@ -374,7 +463,6 @@ def cluster(
             dg.canonical_order(np.asarray(res.merges), n=n),
             n, stop_at_k, distance_threshold,
         )
-        backend = "serial"
     else:
         if points is not None:
             D = build_distance_matrix(points, used_metric)

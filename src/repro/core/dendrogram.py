@@ -239,6 +239,27 @@ def merges_equivalent(
     return bool(np.allclose(va, vb, rtol=rtol, atol=atol))
 
 
+def merge_set_agreement(
+    a: np.ndarray, b: np.ndarray, n: int | None = None
+) -> float:
+    """Fraction of created clusters two merge lists share, in ``[0, 1]``.
+
+    Each list is reduced to its set of created leafsets
+    (:func:`merge_leafsets`, heights ignored); the score is
+    ``|A ∩ B| / max(|A|, |B|)`` — 1.0 iff the trees have identical
+    structure.  This is the measured quality gate for the approximate
+    tiers (:func:`repro.core.distributed.two_phase_from_points`): the
+    two-phase dendrogram's agreement with the exact engine's is
+    *reported* in ``benchmarks/bench_distributed.py`` / EXPERIMENTS.md
+    rather than assumed.  Compare full runs of the same ``n`` — truncated
+    prefixes score against whatever the other list built.
+    """
+    sa = set(merge_leafsets(a, n))
+    sb = set(merge_leafsets(b, n))
+    denom = max(len(sa), len(sb))
+    return len(sa & sb) / denom if denom else 1.0
+
+
 def merge_heights(merges: np.ndarray) -> np.ndarray:
     return np.asarray(merges)[:, 2]
 

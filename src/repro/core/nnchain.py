@@ -93,11 +93,14 @@ __all__ = [
     "NNCHAIN_BATCH_AUTO_MIN_N",
     "nn_chain",
     "nn_chain_from_points",
+    "nn_chain_from_summaries",
     "nn_chain_batched",
     "nn_chain_batched_from_points",
     "resolve_algorithm",
     "resolve_batch_algorithm",
     "resolve_matrix_free",
+    "summary_distance",
+    "summary_merge",
 ]
 
 #: Linkage methods satisfying the reducibility inequality — the ones the
@@ -161,13 +164,17 @@ def resolve_algorithm(
     """Canonical ``algorithm=`` switch for a ``cluster`` call.
 
     ``"lw"`` / ``"nnchain"`` are explicit (``"nnchain"`` validates the
-    method is reducible and the backend is the single-device one — the
-    chain loop is inherently serial; distributed/kernel backends keep
-    the LW engine).  ``"auto"`` picks nnchain only for the *default-knob*
-    serial path — reducible method, ``n ≥`` :data:`NNCHAIN_AUTO_MIN_N`,
-    baseline variant, untouched compaction — so callers that pin LW
-    engine knobs (``variant=``, an explicit ``compaction=``) keep the
-    engine those knobs belong to.
+    method is reducible and the backend is one the chain loop has a
+    composition for: the serial single-device loop, or the sharded
+    matrix-free points engine on ``backend="distributed"``
+    (:func:`repro.core.distributed.distributed_nn_chain_from_points`);
+    the kernel backend keeps the LW engine).  ``"auto"`` picks nnchain
+    only for the *default-knob* serial path — reducible method, ``n ≥``
+    :data:`NNCHAIN_AUTO_MIN_N`, baseline variant, untouched compaction —
+    so callers that pin LW engine knobs (``variant=``, an explicit
+    ``compaction=``) keep the engine those knobs belong to, and a
+    multi-device ``auto`` backend keeps the LW row-sharded loop (the
+    distributed chain is explicit opt-in).
     """
     if flag == "lw":
         return "lw"
@@ -179,11 +186,12 @@ def resolve_algorithm(
                 "produce inversions that break the chain invariant; use "
                 "algorithm='lw')"
             )
-        if backend not in ("auto", "serial"):
+        if backend not in ("auto", "serial", "distributed"):
             raise ValueError(
-                f"algorithm='nnchain' is a single-device engine; "
-                f"backend={backend!r} keeps the LW merge loop (pass "
-                "backend='serial' or algorithm='lw')"
+                f"algorithm='nnchain' has serial and distributed "
+                f"compositions; backend={backend!r} keeps the LW merge "
+                "loop (pass backend='serial'/'distributed' or "
+                "algorithm='lw')"
             )
         return "nnchain"
     if flag != "auto":
@@ -449,12 +457,17 @@ def _chain_loop(
     return jax.lax.while_loop(cond, body, state)
 
 
-def _init_state(rep: tuple, alive: jax.Array, n_steps: int) -> NNState:
+def _init_state(
+    rep: tuple, alive: jax.Array, n_steps: int, sizes: jax.Array | None = None
+) -> NNState:
+    """Fresh chain-loop carry.  ``sizes`` defaults to unit weight per live
+    slot (leaves); the summaries entry point passes pre-accumulated
+    cluster sizes (two-phase tier, slots are whole clusters)."""
     n = alive.shape[0]
     return NNState(
         rep=rep,
         alive=alive,
-        sizes=alive.astype(_F32),
+        sizes=alive.astype(_F32) if sizes is None else sizes,
         chain=jnp.zeros((n,), jnp.int32),
         chain_len=jnp.zeros((), jnp.int32),
         merges=jnp.zeros((max(n_steps, 0), 4), _F32),
@@ -559,55 +572,73 @@ def nn_chain(D: jax.Array, method: str = "complete") -> LWResult:
 # ---------------------------------------------------------------------------
 
 
+def summary_distance(method, sq, u_k, u_top, n_k, n_top):
+    """LW distance from geometric summaries, given ``sq = ‖w_top − w_k‖²``.
+
+    Broadcasts: ``sq``/``u_k``/``n_k`` may be any shape (a full candidate
+    row, or one shard's local slice of it — the distributed composition
+    passes the slice), ``u_top``/``n_top`` are the tip's scalars.  Shared
+    by the serial, batched and sharded chain engines so their distances
+    stay bit-identical (the cross-engine equivalence tests rely on it).
+    """
+    if method == "ward":
+        return 2.0 * n_top * n_k / (n_top + n_k) * sq
+    return sq + u_k + u_top                     # average / weighted
+
+
+def summary_merge(method, w_i, w_j, u_i, u_j, n_i, n_j):
+    """Merge two geometric summaries — the O(d) recursion per method.
+
+    Returns ``(w_new, u_new)`` for the union cluster.  ``ward`` keeps the
+    size-weighted centroid (Wishart form, ``u ≡ 0``); ``average`` adds
+    the exact mean within-cluster scatter combination; ``weighted`` is
+    the WPGMA midpoint recursion.  One definition serves the serial,
+    batched, sharded and two-phase compositions.
+    """
+    tot = n_i + n_j
+    gap = jnp.sum((w_i - w_j) ** 2)
+    if method == "weighted":                # WPGMA midpoint recursion
+        w_new = 0.5 * (w_i + w_j)
+        u_new = 0.5 * (u_i + u_j) + 0.25 * gap
+    elif method == "average":               # size-weighted centroid + scatter
+        w_new = (n_i * w_i + n_j * w_j) / tot
+        u_new = (n_i * u_i + n_j * u_j) / tot + (n_i * n_j) / (tot * tot) * gap
+    else:                                   # ward: centroid only, u ≡ 0
+        w_new = (n_i * w_i + n_j * w_j) / tot
+        u_new = jnp.zeros((), _F32)
+    return w_new, u_new
+
+
 def _points_nnchain_ops(
     method: str, n: int, *, use_pallas: bool, block_n: int, interpret: bool
 ) -> NNChainOps:
     """Geometric-summary primitives — O(n·d) row build, O(d) merge.
 
     The squared-norm row ``‖w_top − w_k‖²`` is the only O(n·d) term; it
-    runs as one jnp pass by default, or tile-by-tile through the Pallas
-    row-vs-points kernel when ``use_pallas`` (TPU; validated in
-    interpret mode on CPU).  Everything else is O(n) epilogue.
+    runs through the shared row-build dispatch
+    (:func:`repro.kernels.pairwise.row_sq_euclidean`) — one jnp pass by
+    default, or tile-by-tile through the Pallas row-vs-points kernel
+    when ``use_pallas`` (TPU; validated in interpret mode on CPU).
+    Everything else is O(n) epilogue.
     """
-    ks = jnp.arange(n)
-
-    def sq_row(W: jax.Array, w_top: jax.Array) -> jax.Array:
-        if use_pallas:
-            from repro.kernels.pairwise import row_sq_euclidean_pallas
-
-            return row_sq_euclidean_pallas(
-                w_top, W, block_n=block_n, interpret=interpret
-            )
-        diff = W - w_top[None, :]
-        return jnp.sum(diff * diff, axis=-1)
+    del n  # summaries broadcast; kept for signature stability
 
     def row(s: NNState, top: jax.Array) -> jax.Array:
+        from repro.kernels.pairwise import row_sq_euclidean
+
         W, u = s.rep
         w_top = jax.lax.dynamic_slice_in_dim(W, top, 1, axis=0)[0]
-        sq = sq_row(W, w_top)
-        if method == "ward":
-            n_top = s.sizes[top]
-            d = 2.0 * n_top * s.sizes / (n_top + s.sizes) * sq
-        else:                                   # average / weighted
-            d = sq + u + u[top]
-        return d
+        sq = row_sq_euclidean(w_top, W, use_pallas=use_pallas,
+                              block_n=block_n, interpret=interpret)
+        return summary_distance(method, sq, u, u[top], s.sizes, s.sizes[top])
 
     def merge(s: NNState, i, j, dmin, top, row_top) -> NNState:
         W, u = s.rep
         w_i = jax.lax.dynamic_slice_in_dim(W, i, 1, axis=0)[0]
         w_j = jax.lax.dynamic_slice_in_dim(W, j, 1, axis=0)[0]
-        n_i, n_j = s.sizes[i], s.sizes[j]
-        tot = n_i + n_j
-        gap = jnp.sum((w_i - w_j) ** 2)
-        if method == "weighted":                # WPGMA midpoint recursion
-            w_new = 0.5 * (w_i + w_j)
-            u_new = 0.5 * (u[i] + u[j]) + 0.25 * gap
-        elif method == "average":               # size-weighted centroid + scatter
-            w_new = (n_i * w_i + n_j * w_j) / tot
-            u_new = (n_i * u[i] + n_j * u[j]) / tot + (n_i * n_j) / (tot * tot) * gap
-        else:                                   # ward: centroid only, u ≡ 0
-            w_new = (n_i * w_i + n_j * w_j) / tot
-            u_new = jnp.zeros((), _F32)
+        w_new, u_new = summary_merge(
+            method, w_i, w_j, u[i], u[j], s.sizes[i], s.sizes[j]
+        )
         W = jax.lax.dynamic_update_slice(W, w_new[None, :], (i, jnp.int32(0)))
         return s._replace(rep=(W, _scalar_set(u, i, u_new)))
 
@@ -686,6 +717,67 @@ def nn_chain_from_points(
                            use_pallas=True, block_n=bn, interpret=interpret)
     return _run_points(X, jnp.ones((n,), bool), method=method, n_steps=n - 1,
                        use_pallas=False, block_n=block_n, interpret=False)
+
+
+@partial(jax.jit, static_argnames=("method", "n_steps"))
+def _run_summaries(
+    W: jax.Array,
+    u: jax.Array,
+    sizes: jax.Array,
+    *,
+    method: str,
+    n_steps: int,
+) -> LWResult:
+    n = W.shape[0]
+    state = _init_state(
+        (W, u), jnp.ones((n,), bool), n_steps, sizes=sizes
+    )
+    ops = _points_nnchain_ops(
+        method, n, use_pallas=False, block_n=512, interpret=False
+    )
+    out = _chain_loop(ops, state, n_steps)
+    return LWResult(merges=out.merges, n_merges=out.n_merges)
+
+
+def nn_chain_from_summaries(
+    W: jax.Array,
+    u: jax.Array,
+    sizes: jax.Array,
+    method: str = "ward",
+) -> LWResult:
+    """Agglomerate ``k`` pre-accumulated geometric summaries.
+
+    Each slot is a whole *cluster* — ``W[k]`` its summary point
+    (centroid / WPGMA midpoint), ``u[k]`` its scatter term, ``sizes[k]``
+    its member count — and the chain runs the same
+    :func:`summary_distance`/:func:`summary_merge` recursions as
+    :func:`nn_chain_from_points` (which is exactly this call with unit
+    sizes and ``u = 0``).  This is phase 2 of the two-phase distributed
+    tier (:func:`repro.core.distributed.two_phase_from_points`): shards
+    cluster locally, then their surviving summaries agglomerate globally
+    here.  Merges are in chain order over summary slots; recorded sizes
+    are summed member counts.
+    """
+    if method not in POINTS_METHODS:
+        raise ValueError(
+            f"summary agglomeration supports {POINTS_METHODS} (their LW "
+            f"distance is a geometric-summary function), got {method!r}"
+        )
+    W = jnp.asarray(W, _F32)
+    if W.ndim != 2:
+        raise ValueError(f"expected (k, d) summary points, got {W.shape}")
+    k = int(W.shape[0])
+    u = jnp.asarray(u, _F32)
+    sizes = jnp.asarray(sizes, _F32)
+    if u.shape != (k,) or sizes.shape != (k,):
+        raise ValueError(
+            f"u and sizes must be ({k},) to match the summaries, got "
+            f"{u.shape} and {sizes.shape}"
+        )
+    if k < 2:
+        return LWResult(merges=jnp.zeros((0, 4), _F32),
+                        n_merges=jnp.zeros((), jnp.int32))
+    return _run_summaries(W, u, sizes, method=method, n_steps=k - 1)
 
 
 # ---------------------------------------------------------------------------

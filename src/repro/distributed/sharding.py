@@ -254,3 +254,31 @@ def abstract_params(spec_tree, dtype_default=None):
         return jax.ShapeDtypeStruct(spec.shape, dt)
 
     return jax.tree.map(one, spec_tree, is_leaf=lambda s: hasattr(s, "axes"))
+
+
+# ---------------------------------------------------------------------------
+# clustering points sharding (the paper engines' data layout, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def shard_rows(arr, mesh: Mesh):
+    """Block-row shard an array's leading dim over the 1-D clustering mesh.
+
+    The layout every sharded clustering engine consumes: shard ``s`` of
+    ``p`` owns rows ``[s·m/p, (s+1)·m/p)`` — the dense LW engine's
+    ``(n, n)`` matrix rows, and the matrix-free chain engine's ``(n, d)``
+    points/summaries.  The leading dim must divide the mesh size
+    (:func:`repro.core.distributed.pad_to_mesh` computes the padded
+    size in one place).
+    """
+    spec = P(mesh.axis_names[0], *([None] * (np.ndim(arr) - 1)))
+    return jax.device_put(arr, NamedSharding(mesh, spec))
+
+
+def replicate(arr, mesh: Mesh):
+    """Replicate a bookkeeping array on every device of the mesh.
+
+    The matrix-free chain engine keeps its O(n) state (scatter terms,
+    liveness, sizes, the chain stack, the merge list) replicated — that
+    is the ``+ n`` in its O(n·d/p + n) per-device storage accounting."""
+    return jax.device_put(arr, NamedSharding(mesh, P()))

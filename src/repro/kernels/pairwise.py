@@ -75,6 +75,34 @@ pairwise_sq_euclidean_pallas_jit = functools.partial(
 )(pairwise_sq_euclidean_pallas)
 
 
+def row_sq_euclidean(
+    x: jax.Array,
+    Y: jax.Array,
+    *,
+    use_pallas: bool = False,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """``(d,) × (m, d) → (m,)`` squared distances — the ONE row-build
+    dispatch every matrix-free chain composition calls.
+
+    The serial points mode (:mod:`repro.core.nnchain`) and the sharded
+    points mode (:mod:`repro.core.distributed`, each shard passing its
+    local ``(m/p, d)`` block) both route here: one fused jnp pass by
+    default, or tile-by-tile through :func:`row_sq_euclidean_pallas`
+    (``use_pallas``; inputs must then satisfy the kernel's padding
+    contract).  Keeping the arithmetic in one place keeps the serial and
+    sharded engines' distances bit-identical — the equivalence tests
+    rely on it.
+    """
+    if use_pallas:
+        return row_sq_euclidean_pallas(
+            x, Y, block_n=block_n, interpret=interpret
+        )
+    diff = Y - x[None, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
 def _row_kernel(x_ref, y_ref, out_ref):
     x = x_ref[...].astype(jnp.float32)          # (1, d) — the chain tip
     y = y_ref[...].astype(jnp.float32)          # (bn, d) — a points tile

@@ -235,7 +235,9 @@ def test_cluster_algorithm_errors(rng):
     X = rng.normal(size=(12, 3)).astype(np.float32)
     with pytest.raises(ValueError, match="reducible"):
         cluster(X, "centroid", algorithm="nnchain")
-    with pytest.raises(ValueError, match="single-device"):
+    # the chain has serial + distributed compositions (DESIGN.md §12)
+    # but still no kernel one — that backend keeps the LW loop
+    with pytest.raises(ValueError, match="serial and distributed"):
         cluster(X, "complete", algorithm="nnchain", backend="kernel")
     with pytest.raises(ValueError, match="matrix_free"):
         cluster(X, "complete", algorithm="nnchain", matrix_free=True)
