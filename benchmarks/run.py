@@ -74,6 +74,45 @@ def _json_path(template: str, suite: str) -> str:
     return f"{root}_{suite}{ext or '.json'}"
 
 
+def compare_rows(
+    fresh: list[dict], baseline: list[dict], tolerance: float = 0.30
+) -> tuple[list[str], list[str]]:
+    """Diff fresh ``us_per_call`` rows against a committed baseline.
+
+    Returns ``(regressions, notes)``: a row regresses when its fresh
+    time exceeds ``baseline × (1 + tolerance)``.  Rows present on only
+    one side are notes, not failures (suites grow; a renamed row shows
+    up as one `only-in` note on each side).  Speed-ups are notes too —
+    a big one usually means the baseline is stale and worth refreshing.
+    """
+    base = {r["name"]: r["us_per_call"] for r in baseline}
+    new = {r["name"]: r["us_per_call"] for r in fresh}
+    regressions, notes = [], []
+    for name in sorted(base.keys() | new.keys()):
+        if name not in new:
+            notes.append(f"{name}: only in baseline")
+            continue
+        if name not in base:
+            notes.append(f"{name}: only in fresh run")
+            continue
+        b, f = base[name], new[name]
+        if b <= 0:
+            notes.append(f"{name}: baseline is {b} us, cannot compare")
+            continue
+        ratio = f / b
+        if ratio > 1.0 + tolerance:
+            regressions.append(
+                f"{name}: {f:.1f} us vs baseline {b:.1f} us "
+                f"({ratio:.2f}x > {1.0 + tolerance:.2f}x)"
+            )
+        elif ratio < 1.0 / (1.0 + tolerance):
+            notes.append(
+                f"{name}: {ratio:.2f}x of baseline — faster; baseline "
+                "may be stale"
+            )
+    return regressions, notes
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--paper", action="store_true",
@@ -85,6 +124,16 @@ def main() -> None:
                     help="also write each suite's rows as machine-readable "
                          "JSON (schema: suite, git_sha, rows[{name, "
                          "us_per_call, derived}]) for the CI perf artifact")
+    ap.add_argument("--compare", default=None, metavar="BENCH_<suite>.json",
+                    help="diff each suite's fresh us_per_call rows against "
+                         "this committed --json artifact and exit non-zero "
+                         "on regression (the perf gate); <suite> expands as "
+                         "for --json, and the baseline is read before the "
+                         "suite runs, so the same path may be given to both")
+    ap.add_argument("--compare-tolerance", type=float, default=0.30,
+                    metavar="FRAC",
+                    help="allowed fractional slowdown before a row is a "
+                         "regression (default 0.30 = +30%%)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -128,13 +177,25 @@ def main() -> None:
         "roofline": roofline_report.main,
     }
     failed = []
+    regressed = []
+    capture = args.json or args.compare
     sha = _git_sha() if args.json else None
     for name, job in jobs.items():
         if args.only and name != args.only:
             continue
+        # load the baseline up front — --json may overwrite the same file
+        baseline = None
+        if args.compare:
+            base_path = _json_path(args.compare, name)
+            try:
+                with open(base_path) as fh:
+                    baseline = json.load(fh)["rows"]
+            except (OSError, KeyError, ValueError) as e:
+                print(f"bench:{name} compare baseline unreadable "
+                      f"({base_path}): {e} — skipping the gate")
         print(f"\n===== bench:{name} =====")
         buf = io.StringIO()
-        tee = _Tee(sys.stdout, buf) if args.json else sys.stdout
+        tee = _Tee(sys.stdout, buf) if capture else sys.stdout
         try:
             with contextlib.redirect_stdout(tee):
                 job()
@@ -143,16 +204,30 @@ def main() -> None:
             traceback.print_exc()
             print(f"bench:{name},FAILED,{type(e).__name__}: {e}")
             continue
+        rows = _parse_rows(buf.getvalue()) if capture else []
         if args.json:
             path = _json_path(args.json, name)
             with open(path, "w") as fh:
                 json.dump(
-                    {"suite": name, "git_sha": sha,
-                     "rows": _parse_rows(buf.getvalue())},
+                    {"suite": name, "git_sha": sha, "rows": rows},
                     fh, indent=2,
                 )
             print(f"bench:{name} rows -> {path}")
-    if failed:
+        if baseline is not None:
+            regs, notes = compare_rows(
+                rows, baseline, args.compare_tolerance)
+            for line in notes:
+                print(f"bench:{name} compare note: {line}")
+            for line in regs:
+                print(f"bench:{name} REGRESSION: {line}")
+            if regs:
+                regressed.append(name)
+            else:
+                print(f"bench:{name} compare: OK "
+                      f"(tolerance +{args.compare_tolerance:.0%})")
+    if regressed:
+        print(f"\nperf gate FAILED: regressions in {', '.join(regressed)}")
+    if failed or regressed:
         sys.exit(1)
 
 

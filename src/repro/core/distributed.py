@@ -58,6 +58,7 @@ import math
 import time
 import warnings
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -86,6 +87,25 @@ from repro.core.nnchain import (
     summary_merge,
 )
 from repro.distributed.fault import SimulatedFailure, StepDeadline
+from repro.obs import NULL_TRACER, Tracer, get_registry
+
+
+class DistributedChainResult(NamedTuple):
+    """:class:`~repro.core.engine.LWResult` plus run telemetry.
+
+    Duck-types ``LWResult`` (``merges``/``n_merges`` first, so every
+    existing consumer keeps working) and carries what the segmented
+    driver previously only logged: how many segments it dispatched, how
+    many shard-loss restarts it absorbed, how many segments straggled
+    past the deadline.  The same counts feed the process-global metrics
+    registry (``distributed_chain_*`` counters, DESIGN.md §13).
+    """
+
+    merges: jax.Array
+    n_merges: jax.Array
+    restarts: int = 0
+    stragglers: int = 0
+    segments: int = 0
 
 
 def make_cluster_mesh(devices=None) -> Mesh:
@@ -530,7 +550,8 @@ def distributed_nn_chain_from_points(
     max_restarts: int = 2,
     deadline: StepDeadline | None = None,
     log=None,
-) -> LWResult:
+    tracer: Tracer | None = None,
+) -> DistributedChainResult:
     """Sharded matrix-free agglomeration of ``(n, d)`` points — the exact
     serial NN-chain, run across every device of *mesh* with
     **O(n·d/p + n)** per-device storage (DESIGN.md §12).
@@ -559,6 +580,15 @@ def distributed_nn_chain_from_points(
     bounded by ``max_restarts`` (then a diagnosable ``RuntimeError``).
     A :class:`~repro.distributed.fault.StepDeadline` flags straggling
     segments (delayed shard) through ``log``/``RuntimeWarning``.
+
+    **Telemetry** (DESIGN.md §13): the returned
+    :class:`DistributedChainResult` carries ``restarts`` /
+    ``stragglers`` / ``segments``; the same counts land on the
+    process-global registry (``distributed_chain_segments_total``,
+    ``..._restarts_total``, ``..._straggler_segments_total``) and, with
+    a ``tracer``, every segment dispatch becomes a ``chain_segment``
+    span in the exported trace.  All of it host-side — the compiled
+    program is untouched.
     """
     if method not in POINTS_METHODS:
         raise ValueError(
@@ -571,8 +601,10 @@ def distributed_nn_chain_from_points(
         raise ValueError(f"expected (n, d) points, got {X.shape}")
     n, d = int(X.shape[0]), int(X.shape[1])
     if n < 2:
-        return LWResult(merges=jnp.zeros((0, 4), _F32),
-                        n_merges=jnp.zeros((), jnp.int32))
+        return DistributedChainResult(
+            merges=jnp.zeros((0, 4), _F32),
+            n_merges=jnp.zeros((), jnp.int32),
+        )
     mesh = require_ring_mesh(mesh)
     p = int(mesh.devices.size)
 
@@ -608,7 +640,16 @@ def distributed_nn_chain_from_points(
 
     n_steps = n - 1
     seg = n_steps if segment_steps is None else max(1, int(segment_steps))
-    done, seg_idx, restarts = 0, 0, 0
+    tracer = tracer or NULL_TRACER
+    reg = get_registry()
+    seg_counter = reg.counter(
+        "distributed_chain_segments_total", "Segment dispatches")
+    restart_counter = reg.counter(
+        "distributed_chain_restarts_total", "Shard-loss same-segment retries")
+    straggler_counter = reg.counter(
+        "distributed_chain_straggler_segments_total",
+        "Segments past the straggler deadline")
+    done, seg_idx, restarts, stragglers = 0, 0, 0, 0
     while done < n_steps:
         target = min(done + seg, n_steps)
         t0 = time.perf_counter()
@@ -622,6 +663,11 @@ def distributed_nn_chain_from_points(
             made = int(state[7])        # syncs the segment (timing + fault)
         except SimulatedFailure as e:
             restarts += 1
+            restart_counter.inc()
+            tracer.add_span(
+                "chain_segment", t0, time.perf_counter(), cat="distributed",
+                segment=seg_idx, error="shard-lost", restarts=restarts,
+            )
             if restarts > max_restarts:
                 raise RuntimeError(
                     f"distributed NN-chain lost a shard at segment "
@@ -638,8 +684,16 @@ def distributed_nn_chain_from_points(
                 "checkpoint, no merges lost",
             )
             continue
-        dt = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        dt = t1 - t0
+        seg_counter.inc()
+        tracer.add_span(
+            "chain_segment", t0, t1, cat="distributed",
+            segment=seg_idx, merges_done=int(state[7]), target=target,
+        )
         if deadline is not None and deadline.observe(dt):
+            stragglers += 1
+            straggler_counter.inc()
             _fault_event(
                 log,
                 f"[fault] segment {seg_idx} straggled ({dt:.3f}s > "
@@ -657,7 +711,10 @@ def distributed_nn_chain_from_points(
             "the input likely contains NaNs (the chain invariant needs a "
             f"total order on distances); committed {done}/{n_steps} merges"
         )
-    return LWResult(merges=state[6], n_merges=state[7])
+    return DistributedChainResult(
+        merges=state[6], n_merges=state[7],
+        restarts=restarts, stragglers=stragglers, segments=seg_idx,
+    )
 
 
 # ---------------------------------------------------------------------------

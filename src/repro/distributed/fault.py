@@ -6,6 +6,11 @@ ICI timeout, preemption notice); here those are *simulated* so the
 recovery machinery — resume-from-checkpoint, deadline skip, bounded retry
 — is real code under test, not a story.  ``run_resilient_loop`` is the
 driver ``launch/train.py`` uses.
+
+Every fault event also lands on the process-global metrics registry
+(``fault_injected_failures_total`` / ``fault_deadline_exceeded_total``,
+see :mod:`repro.obs` and DESIGN.md §13), so a load run's dump shows the
+fault history without anyone having captured the log.
 """
 
 from __future__ import annotations
@@ -13,6 +18,12 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from typing import Callable
+
+from repro.obs import get_registry
+
+
+def _count_fault(name: str, help_text: str) -> None:
+    get_registry().counter(name, help_text).inc()
 
 
 class SimulatedFailure(RuntimeError):
@@ -30,6 +41,10 @@ class FailurePlan:
     def check(self, step: int) -> None:
         if step in self.fail_at and step not in self._fired:
             self._fired.add(step)
+            _count_fault(
+                "fault_injected_failures_total",
+                "SimulatedFailure raises from FailurePlan.check",
+            )
             raise SimulatedFailure(f"injected failure at step {step}")
 
 
@@ -52,7 +67,13 @@ class StepDeadline:
         if len(self.history) <= self.warmup:
             return False
         med = sorted(self.history[:-1])[len(self.history[:-1]) // 2]
-        return seconds > self.factor * max(med, 1e-6)
+        exceeded = seconds > self.factor * max(med, 1e-6)
+        if exceeded:
+            _count_fault(
+                "fault_deadline_exceeded_total",
+                "Steps/segments flagged past the straggler deadline",
+            )
+        return exceeded
 
 
 def run_resilient_loop(

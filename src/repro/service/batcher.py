@@ -45,7 +45,6 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from collections import deque
 from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
 from typing import Sequence
@@ -67,7 +66,13 @@ from repro.core.batched import (
 from repro.core.engine import VARIANTS
 from repro.core.linkage import METHODS
 from repro.core.nnchain import POINTS_METHODS, resolve_batch_algorithm
-from repro.service.cache import CACHEABLE_ENGINES, CompileCache, warmup_signatures
+from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
+from repro.service.cache import (
+    CACHEABLE_ENGINES,
+    CompileCache,
+    _sig_label,
+    warmup_signatures,
+)
 
 
 @dataclass(frozen=True)
@@ -163,7 +168,13 @@ class ServiceConfig:
 
 @dataclass(frozen=True)
 class MetricsSnapshot:
-    """Point-in-time service metrics (see ``ServiceMetrics.snapshot``)."""
+    """Point-in-time service metrics (see ``ServiceMetrics.snapshot``).
+
+    Carries its own timebase (``started_at`` wall clock, ``uptime_s``
+    monotonic) and the derived ``throughput_rps`` so a snapshot is
+    interpretable without the caller keeping a clock of its own.  The
+    trailing fields default so pre-timebase constructions stay valid.
+    """
 
     n_requests: int
     n_batches: int
@@ -173,60 +184,94 @@ class MetricsSnapshot:
     mean_batch_size: float
     pad_waste: float            # fraction of dispatched matrix cells that pad
     cache_hit_rate: float | None
+    started_at: float = 0.0     # service start, seconds since the epoch
+    uptime_s: float = 0.0       # monotonic seconds since service start
+    throughput_rps: float = 0.0  # n_requests / uptime_s
 
 
 class ServiceMetrics:
-    """Thread-safe accumulators the dispatcher feeds per batch.
+    """The dispatcher's per-batch accumulators — registry instruments.
 
-    Latencies live in a bounded ring (the last ``window`` requests) so a
+    Migrated onto :class:`repro.obs.registry.MetricsRegistry`
+    (DESIGN.md §13): counters are labeled registry counters, latencies a
+    bounded-window histogram (the last ``window`` requests, so a
     long-lived service neither grows without bound nor pays an
-    ever-larger percentile sort per snapshot; the scalar counters are
-    whole-lifetime."""
+    ever-larger percentile sort per snapshot).  The original API — the
+    ``observe_*`` feeders, the scalar attributes, ``snapshot()`` — is
+    unchanged; the registry view is what the exporters
+    (:mod:`repro.obs.export`) render.
+    """
 
-    def __init__(self, window: int = 8192) -> None:
-        self._lock = threading.Lock()
-        self._latencies_ms: deque[float] = deque(maxlen=window)
-        self.n_requests = 0
-        self.n_batches = 0
-        self.n_failed = 0
-        self.cells_real = 0
-        self.cells_padded = 0
+    def __init__(self, window: int = 8192,
+                 registry: MetricsRegistry | None = None) -> None:
+        self.registry = registry or MetricsRegistry()
+        self.started_at = time.time()
+        self._t0 = time.perf_counter()
+        self._requests = self.registry.counter(
+            "service_requests_total", "Requests resolved successfully")
+        self._failed = self.registry.counter(
+            "service_failed_total", "Requests resolved with an error")
+        self._batches = self.registry.counter(
+            "service_batches_total", "Bucket dispatches (engine calls)")
+        self._cells = self.registry.counter(
+            "service_cells_total",
+            "Dispatched operand cells by kind (real vs padded total)")
+        self._latency = self.registry.histogram(
+            "service_request_latency_ms", "submit→resolve latency",
+            window=window)
+
+    # original scalar attributes, now registry-backed reads
+    @property
+    def n_requests(self) -> int:
+        return int(self._requests.total())
+
+    @property
+    def n_batches(self) -> int:
+        return int(self._batches.total())
+
+    @property
+    def n_failed(self) -> int:
+        return int(self._failed.total())
+
+    @property
+    def cells_real(self) -> int:
+        return int(self._cells.value(kind="real"))
+
+    @property
+    def cells_padded(self) -> int:
+        return int(self._cells.value(kind="padded"))
 
     def observe_request(self, latency_ms: float) -> None:
-        with self._lock:
-            self.n_requests += 1
-            self._latencies_ms.append(latency_ms)
+        self._requests.inc()
+        self._latency.observe(latency_ms)
 
     def observe_failure(self) -> None:
-        with self._lock:
-            self.n_failed += 1
+        self._failed.inc()
 
     def observe_bucket(self, cells_real: int, cells_padded: int) -> None:
-        with self._lock:
-            self.n_batches += 1
-            self.cells_real += cells_real
-            self.cells_padded += cells_padded
+        self._batches.inc()
+        self._cells.inc(cells_real, kind="real")
+        self._cells.inc(cells_padded, kind="padded")
 
     def snapshot(self, cache: CompileCache | None = None) -> MetricsSnapshot:
-        with self._lock:
-            lat = np.asarray(self._latencies_ms, np.float64)
-            pad = (
-                1.0 - self.cells_real / self.cells_padded
-                if self.cells_padded
-                else 0.0
-            )
-            return MetricsSnapshot(
-                n_requests=self.n_requests,
-                n_batches=self.n_batches,
-                n_failed=self.n_failed,
-                p50_ms=float(np.percentile(lat, 50)) if lat.size else 0.0,
-                p99_ms=float(np.percentile(lat, 99)) if lat.size else 0.0,
-                mean_batch_size=(
-                    self.n_requests / self.n_batches if self.n_batches else 0.0
-                ),
-                pad_waste=pad,
-                cache_hit_rate=cache.stats.hit_rate if cache is not None else None,
-            )
+        n_req = self.n_requests
+        n_bat = self.n_batches
+        padded = self.cells_padded
+        pad = 1.0 - self.cells_real / padded if padded else 0.0
+        uptime = time.perf_counter() - self._t0
+        return MetricsSnapshot(
+            n_requests=n_req,
+            n_batches=n_bat,
+            n_failed=self.n_failed,
+            p50_ms=self._latency.percentile(50),
+            p99_ms=self._latency.percentile(99),
+            mean_batch_size=n_req / n_bat if n_bat else 0.0,
+            pad_waste=pad,
+            cache_hit_rate=cache.stats.hit_rate if cache is not None else None,
+            started_at=self.started_at,
+            uptime_s=uptime,
+            throughput_rps=n_req / uptime if uptime > 0 else 0.0,
+        )
 
 
 @dataclass
@@ -239,6 +284,7 @@ class _Job:
     future: Future = field(repr=False)
     t_submit: float = 0.0
     n: int = 0                  # problem size (leaves)
+    trace_id: int = 0           # per-request id threading the span story
     done: bool = False          # guarded by the service condition lock
 
 
@@ -255,10 +301,23 @@ class ClusteringService:
         config: ServiceConfig | None = None,
         *,
         cache: CompileCache | None = None,
+        registry: MetricsRegistry | None = None,
+        tracer: Tracer | None = None,
     ) -> None:
         self.config = config or ServiceConfig()
-        self.cache = cache or CompileCache(self.config.cache_capacity)
-        self.metrics = ServiceMetrics()
+        self.tracer = tracer or NULL_TRACER
+        # one registry per service (two services in one process must not
+        # double-count); a caller-built cache brings its own, adopt it
+        if cache is not None:
+            self.cache = cache
+            self.registry = registry or cache.stats.registry
+        else:
+            self.registry = registry or MetricsRegistry()
+            self.cache = CompileCache(
+                self.config.cache_capacity,
+                registry=self.registry, tracer=self.tracer,
+            )
+        self.metrics = ServiceMetrics(registry=self.registry)
         self._queue: queue.Queue[_Job] = queue.Queue()
         self._pending = 0
         self._cond = threading.Condition()
@@ -350,6 +409,8 @@ class ClusteringService:
         if self._closing.is_set():
             fut.set_exception(RuntimeError("service is closed"))
             return fut
+        trace_id = self.tracer.new_trace_id()
+        t_sub0 = time.perf_counter()
         try:
             cfg = self.config
             D, points, used_metric = _interpret_input(
@@ -383,12 +444,22 @@ class ClusteringService:
                 )
         except Exception as exc:  # noqa: BLE001 — resolve, don't raise
             self.metrics.observe_failure()
+            self.tracer.add_span(
+                "submit", t_sub0, time.perf_counter(),
+                trace_id=trace_id, error=type(exc).__name__,
+            )
             fut.set_exception(exc)
             return fut
+        t_sub1 = time.perf_counter()
+        self.tracer.add_span(
+            "submit", t_sub0, t_sub1,
+            trace_id=trace_id, n=n, matrix_free=mat is None,
+        )
         with self._cond:
             self._pending += 1
         self._queue.put(
-            _Job(mat, points, used_metric, fut, time.perf_counter(), n=n)
+            _Job(mat, points, used_metric, fut, t_sub1, n=n,
+                 trace_id=trace_id)
         )
         if self._closing.is_set():
             # close() may have drained the queue between our closing check
@@ -412,6 +483,7 @@ class ClusteringService:
 
     def _loop(self) -> None:
         cfg = self.config
+        self.tracer.name_thread("lw-service-batcher")
         while True:
             try:
                 first = self._queue.get(timeout=0.02)
@@ -459,6 +531,8 @@ class ClusteringService:
     def _run_bucket(self, key: tuple[int, int], group: list[_Job]) -> None:
         cfg = self.config
         n_pad, pdim = key
+        tracer = self.tracer
+        t_bucket0 = time.perf_counter()
         sig = bucket_signature(
             n_pad,
             len(group),
@@ -471,30 +545,50 @@ class ClusteringService:
             algorithm=cfg.algorithm,
             points_dim=pdim,
         )
+        # the dispatcher is the cache's only caller here, so a before/after
+        # hit-count read classifies this lookup; the cache's own compile
+        # span (on a miss) nests inside by time containment
+        hits_before = self.cache.stats.hits
+        t_cache0 = time.perf_counter()
         fn = self.cache.get(sig)
+        t_cache1 = time.perf_counter()
+        tracer.add_span(
+            "cache", t_cache0, t_cache1, cat="cache",
+            hit=self.cache.stats.hits > hits_before,
+        )
 
         # same pack/slice helpers as the offline scheduler — one rule set
         thr = jnp.float32(
             0.0 if cfg.distance_threshold is None else cfg.distance_threshold
         )
+        t_pack0 = time.perf_counter()
         if pdim:
             Xb, n_real = pack_points_bucket([j.points for j in group], sig)
-            res = fn(jnp.asarray(Xb), jnp.asarray(n_real), thr)
             cells_real = sum(j.n * pdim for j in group)
             cells_padded = sig.bucket_B * n_pad * pdim
         else:
             Db, n_real = pack_bucket([j.matrix for j in group], sig)
-            res = fn(jnp.asarray(Db), jnp.asarray(n_real), thr)
             cells_real = sum(j.n ** 2 for j in group)
             cells_padded = sig.bucket_B * n_pad * n_pad
-        merges = np.asarray(res.merges)
+        t_pack1 = time.perf_counter()
+        tracer.add_span("pack", t_pack0, t_pack1, n_jobs=len(group))
+        if pdim:
+            res = fn(jnp.asarray(Xb), jnp.asarray(n_real), thr)
+        else:
+            res = fn(jnp.asarray(Db), jnp.asarray(n_real), thr)
+        merges = np.asarray(res.merges)    # device sync — execute span ends
         n_merges = np.asarray(res.n_merges)
         t_done = time.perf_counter()
+        tracer.add_span(
+            "execute", t_pack1, t_done, cat="device",
+            bucket_n=n_pad, bucket_B=sig.bucket_B,
+        )
 
         self.metrics.observe_bucket(
             cells_real=int(cells_real), cells_padded=int(cells_padded)
         )
         for slot, job in enumerate(group):
+            t_res0 = time.perf_counter()
             n = job.n
             if sig.algorithm == "nnchain":
                 if int(n_merges[slot]) != n - 1:
@@ -503,6 +597,10 @@ class ClusteringService:
                         "finishing — the input likely contains NaNs (the "
                         "chain invariant needs a total order on distances)"
                     ))
+                    tracer.add_span(
+                        "resolve", t_res0, time.perf_counter(),
+                        trace_id=job.trace_id, error="nnchain-cap",
+                    )
                     continue
                 m = dg.truncate_canonical(
                     dg.canonical_order(merges[slot, : n - 1], n=n),
@@ -522,6 +620,15 @@ class ClusteringService:
                 metric=job.metric,
             )
             self._finish(job, result=result, t_done=t_done)
+            tracer.add_span(
+                "resolve", t_res0, time.perf_counter(),
+                trace_id=job.trace_id, n=n,
+            )
+        tracer.add_span(
+            "bucket", t_bucket0, time.perf_counter(),
+            signature=_sig_label(sig),
+            trace_ids=[j.trace_id for j in group],
+        )
 
     def _finish(
         self,

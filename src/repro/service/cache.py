@@ -30,6 +30,7 @@ capture portably — route mesh traffic through ``cluster_batch``.
 from __future__ import annotations
 
 import threading
+import time
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable, Iterable, Sequence
@@ -38,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.batched import BUCKETS, BucketSignature, bucket_batch, bucket_signature
+from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
 
 #: Static Pallas block size used for every cached ``kernel``-engine
 #: executable (the :mod:`repro.kernels.ops` default).
@@ -47,19 +49,85 @@ KERNEL_BLOCK_M = 256
 CACHEABLE_ENGINES: tuple[str, ...] = ("serial", "kernel")
 
 
-@dataclass
 class CacheStats:
-    """Counters of one :class:`CompileCache` (monotonic)."""
+    """Counters of one :class:`CompileCache` (monotonic).
 
-    hits: int = 0
-    misses: int = 0
-    compiles: int = 0
-    evictions: int = 0
+    Migrated onto the obs registry (DESIGN.md §13): the counts live in a
+    labeled ``service_cache_events_total`` counter so the exporters see
+    them, while the original read API (``stats.hits`` / ``.misses`` /
+    ``.compiles`` / ``.evictions`` / ``.hit_rate``) is preserved as
+    properties — callers and tests are unchanged.
+    """
+
+    def __init__(self, registry: MetricsRegistry | None = None) -> None:
+        self.registry = registry or MetricsRegistry()
+        self._events = self.registry.counter(
+            "service_cache_events_total",
+            "CompileCache events by kind (hit/miss/compile/eviction)",
+        )
+
+    def record(self, event: str, n: int = 1) -> None:
+        self._events.inc(n, event=event)
+
+    @property
+    def hits(self) -> int:
+        return int(self._events.value(event="hit"))
+
+    @property
+    def misses(self) -> int:
+        return int(self._events.value(event="miss"))
+
+    @property
+    def compiles(self) -> int:
+        return int(self._events.value(event="compile"))
+
+    @property
+    def evictions(self) -> int:
+        return int(self._events.value(event="eviction"))
 
     @property
     def hit_rate(self) -> float:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+
+@dataclass(frozen=True)
+class CostProfile:
+    """Static per-dispatch cost of one compiled executable, derived from
+    its optimized HLO by the loop-aware :class:`repro.roofline.hlo_cost.
+    HloCost` model — attached to every cached :class:`BucketSignature`
+    at compile time so each executable carries its cost profile.
+    """
+
+    flops: float
+    bytes: float
+    coll_bytes: float
+
+    @property
+    def intensity(self) -> float:
+        """Arithmetic intensity (flop/byte) — <1 means memory-bound."""
+        return self.flops / self.bytes if self.bytes else 0.0
+
+
+def profile_executable(fn) -> CostProfile | None:
+    """HLO-derived flops/bytes of a compiled executable; None if the
+    HLO text is unavailable or unparseable (telemetry must never fail a
+    compile)."""
+    try:
+        from repro.roofline.hlo_cost import HloCost
+
+        cost = HloCost(fn.as_text()).total()
+        return CostProfile(flops=cost.flops, bytes=cost.bytes,
+                           coll_bytes=cost.coll_bytes)
+    except Exception:  # noqa: BLE001 — telemetry is best-effort
+        return None
+
+
+def _sig_label(sig: BucketSignature) -> str:
+    """Compact span/metric label for one signature."""
+    return (f"{sig.algorithm}/{sig.method}/{sig.engine}"
+            f"/n{sig.bucket_n}/B{sig.bucket_B}"
+            + (f"/d{sig.points_dim}" if sig.points_dim else ""))
 
 
 def _compile(sig: BucketSignature) -> Callable:
@@ -117,15 +185,34 @@ class CompileCache:
     Thread-safe: the batcher's dispatcher thread and a foreground warmup
     may race on :meth:`get`.  Compilation happens outside the lock (it
     can take seconds); a lost race compiles twice and keeps one.
+
+    Observability (DESIGN.md §13): stats live on an obs registry
+    (private by default; the owning service passes its own), each
+    compile is timed into a ``service_compile_seconds`` histogram and
+    recorded as a ``compile`` span on ``tracer``, and the executable's
+    HLO-derived :class:`CostProfile` is attached under its signature in
+    :attr:`cost_profiles` — ask the cache what any cached program costs
+    per dispatch without running it.
     """
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64, *,
+                 registry: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
-        self.stats = CacheStats()
+        self.registry = registry or MetricsRegistry()
+        self.tracer = tracer or NULL_TRACER
+        self.stats = CacheStats(self.registry)
+        self.cost_profiles: dict[BucketSignature, CostProfile] = {}
         self._entries: OrderedDict[BucketSignature, Callable] = OrderedDict()
         self._lock = threading.Lock()
+        self._entries_gauge = self.registry.gauge(
+            "service_cache_entries", "Live executables in the AOT cache"
+        )
+        self._compile_hist = self.registry.histogram(
+            "service_compile_seconds", "AOT compile wall time", window=1024
+        )
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -144,18 +231,32 @@ class CompileCache:
             fn = self._entries.get(sig)
             if fn is not None:
                 self._entries.move_to_end(sig)
-                self.stats.hits += 1
+                self.stats.record("hit")
                 return fn
-            self.stats.misses += 1
+            self.stats.record("miss")
+        t0 = time.perf_counter()
         fn = _compile(sig)
+        t1 = time.perf_counter()
+        profile = profile_executable(fn)
+        self._compile_hist.observe(t1 - t0)
+        span_args = {"signature": _sig_label(sig),
+                     "compile_s": round(t1 - t0, 6)}
+        if profile is not None:
+            span_args.update(hlo_flops=profile.flops, hlo_bytes=profile.bytes,
+                             hlo_coll_bytes=profile.coll_bytes)
+        self.tracer.add_span("compile", t0, t1, cat="cache", **span_args)
         with self._lock:
             if sig not in self._entries:
-                self.stats.compiles += 1
+                self.stats.record("compile")
                 self._entries[sig] = fn
+                if profile is not None:
+                    self.cost_profiles[sig] = profile
                 while len(self._entries) > self.capacity:
-                    self._entries.popitem(last=False)
-                    self.stats.evictions += 1
+                    old, _ = self._entries.popitem(last=False)
+                    self.cost_profiles.pop(old, None)
+                    self.stats.record("eviction")
             self._entries.move_to_end(sig)
+            self._entries_gauge.set(len(self._entries))
             return self._entries[sig]
 
     def warmup(self, sigs: Iterable[BucketSignature]) -> int:

@@ -12,6 +12,14 @@ after warmup.
 
 Problem matrices are pre-generated with numpy (no jax on the submit
 path) so the generator measures the service, not itself.
+
+Observability (DESIGN.md §13): ``--trace-out run.trace.json`` records
+the full span story (submit → pack → cache → execute → resolve, one
+trace id per request) and writes Chrome trace-event JSON — load it in
+``chrome://tracing`` or https://ui.perfetto.dev.  ``--metrics-out
+run.metrics.json`` dumps the service's metrics registry as JSON
+(periodically during the run via ``--metrics-period``, and always once
+at exit); ``--prometheus`` prints the text exposition to stdout.
 """
 
 from __future__ import annotations
@@ -23,6 +31,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.obs import PeriodicDumper, Tracer, dump_json, prometheus_text
 from repro.service.batcher import ClusteringService, MetricsSnapshot, ServiceConfig
 from repro.service.cache import engine_jit_cache_size
 
@@ -123,21 +132,43 @@ def drive(
     warmup: bool = True,
     dim: int = 8,
     as_points: bool = False,
+    tracer: Tracer | None = None,
+    registry=None,
+    metrics_out: str | None = None,
+    metrics_period_s: float = 10.0,
 ) -> LoadReport:
-    """Warm a fresh service, run one timed open-loop load, close it."""
-    with ClusteringService(config) as service:
-        warmup_compiles = service.warmup() if warmup else 0
-        compiles_before = service.cache.stats.compiles
-        jit_before = engine_jit_cache_size()
-        futures, elapsed, _ = run_load(
-            service,
-            rate_hz=rate_hz,
-            duration_s=duration_s,
-            sizes=sizes,
-            seed=seed,
-            dim=dim,
-            as_points=as_points,
+    """Warm a fresh service, run one timed open-loop load, close it.
+
+    ``tracer`` (if given) records the span story of the whole run;
+    ``registry`` (if given) receives the service metrics — pass one to
+    read or export them after the service closes; ``metrics_out`` dumps
+    the registry JSON every ``metrics_period_s`` seconds during the run
+    and once more at exit.
+    """
+    with ClusteringService(config, tracer=tracer, registry=registry) as service:
+        if tracer is not None:
+            tracer.name_thread("load-driver")
+        dumper = (
+            PeriodicDumper(service.registry, metrics_out, metrics_period_s)
+            .start()
+            if metrics_out is not None else None
         )
+        try:
+            warmup_compiles = service.warmup() if warmup else 0
+            compiles_before = service.cache.stats.compiles
+            jit_before = engine_jit_cache_size()
+            futures, elapsed, _ = run_load(
+                service,
+                rate_hz=rate_hz,
+                duration_s=duration_s,
+                sizes=sizes,
+                seed=seed,
+                dim=dim,
+                as_points=as_points,
+            )
+        finally:
+            if dumper is not None:
+                dumper.stop()       # dump-on-exit, even on a failed run
         # only inspect resolved futures — under saturation some are still
         # pending and a bare f.exception() would block the driver forever
         n_errors = sum(
@@ -204,6 +235,16 @@ def main(argv: list[str] | None = None) -> LoadReport:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-warmup", action="store_true",
                     help="skip warmup (shows the cold-start compile cost)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record spans and write Chrome trace-event JSON "
+                         "here (open in chrome://tracing or Perfetto)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="dump the metrics registry as JSON here "
+                         "(periodic during the run + once at exit)")
+    ap.add_argument("--metrics-period", type=float, default=10.0,
+                    help="seconds between periodic metrics dumps")
+    ap.add_argument("--prometheus", action="store_true",
+                    help="print the Prometheus text exposition at exit")
     args = ap.parse_args(argv)
 
     config = ServiceConfig(
@@ -216,6 +257,11 @@ def main(argv: list[str] | None = None) -> LoadReport:
         max_delay_ms=args.max_delay_ms,
         bucket_ns=tuple(int(b) for b in args.buckets.split(",")),
     )
+    tracer = Tracer() if args.trace_out else None
+    registry = None
+    if args.metrics_out or args.prometheus:
+        from repro.obs import MetricsRegistry
+        registry = MetricsRegistry()
     report = drive(
         config,
         rate_hz=args.rate,
@@ -225,8 +271,30 @@ def main(argv: list[str] | None = None) -> LoadReport:
         warmup=not args.no_warmup,
         dim=args.dim,
         as_points=args.points,
+        tracer=tracer,
+        registry=registry,
+        metrics_out=args.metrics_out,
+        metrics_period_s=args.metrics_period,
     )
     print_report(report)
+    if tracer is not None:
+        n = tracer.write(args.trace_out)
+        print(f"trace: {n} spans -> {args.trace_out}")
+    if registry is not None and args.metrics_out:
+        # final dump again, now with the driver-side report attached
+        dump_json(registry, args.metrics_out, extra={
+            "n_submitted": report.n_submitted,
+            "n_errors": report.n_errors,
+            "n_unresolved": report.n_unresolved,
+            "elapsed_s": report.elapsed_s,
+            "throughput_rps": report.throughput_rps,
+            "warmup_compiles": report.warmup_compiles,
+            "steady_compiles": report.steady_compiles,
+            "steady_jit_growth": report.steady_jit_growth,
+        })
+        print(f"metrics: -> {args.metrics_out}")
+    if registry is not None and args.prometheus:
+        print(prometheus_text(registry))
     return report
 
 

@@ -211,6 +211,8 @@ res = distributed_nn_chain_from_points(
     failure_plan=FailurePlan(fail_at=(1,)), log=events.append)
 assert np.array_equal(ser, np.asarray(res.merges))
 assert any("retrying segment" in e for e in events), events
+# telemetry rides on the result (DESIGN.md §13), not just the log
+assert res.restarts == 1 and res.stragglers == 0 and res.segments == 4, res
 
 # 2. a shard that never comes back: diagnosable error, not a hang
 class AlwaysFail:
@@ -232,5 +234,6 @@ res = distributed_nn_chain_from_points(
     deadline=StepDeadline(factor=0.0, warmup=1), log=events.append)
 assert np.array_equal(ser, np.asarray(res.merges))
 assert any("straggled" in e for e in events), events
+assert res.stragglers >= 1 and res.restarts == 0, res
 print("OK")
 """, n_devices=2)
