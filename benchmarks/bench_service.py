@@ -18,6 +18,15 @@ per-lane dendrogram equivalence (``canonical_order`` semantics via
 the nnchain service does not clear ≥1.5x the LW req/s — the routing
 regression gate for ``algorithm="auto"``.
 
+``main_overload`` (its own ``run.py`` suite, ``--only
+service_overload``) runs the DESIGN.md §14 overload sweep: closed-loop
+capacity probe, then open-loop load at 0.5×–4× capacity through the
+shed-oldest / 3-lane / deadline posture of
+``repro.service.server.overload_config``.  It **fails** unless
+p99-of-admitted stays within ``OVERLOAD_P99_GATE`` of the 1× p99,
+shedding stays confined to the lowest lane, goodput holds above
+``OVERLOAD_GOODPUT_FLOOR`` of capacity, and every decline is typed.
+
     PYTHONPATH=src python benchmarks/bench_service.py [--smoke] [--rate R]
 """
 
@@ -42,6 +51,15 @@ NNCHAIN_AB_GATE = 1.5
 #: well under 1% — spans are a few host-side perf_counter reads per
 #: request against a ~ms engine dispatch).
 OBS_OVERHEAD_GATE = 0.05
+
+#: Overload gates (DESIGN.md §14): at 4× capacity, p99-of-admitted may
+#: be at most this multiple of the 1× p99 (the bounded queue + deadlines
+#: must keep admitted latency flat while shedding absorbs the excess)...
+OVERLOAD_P99_GATE = 2.0
+#: ...and goodput at 4× must hold at least this fraction of capacity
+#: (shedding exists to PROTECT throughput; a collapse here means the
+#: admission path itself became the bottleneck).
+OVERLOAD_GOODPUT_FLOOR = 0.35
 
 
 def ab_instrumentation_overhead(smoke: bool = False):
@@ -293,6 +311,103 @@ def main(rate: float = 300.0, duration: float = 3.0, smoke: bool = False):
     return report
 
 
+def _overload_gates(report) -> list[str]:
+    """Check one sweep report against the §14 gates; return violations."""
+    lo, hi = report.point(1.0), report.point(4.0)
+    lowest = len(hi.shed_by_lane) - 1
+    violations = []
+    ratio = (hi.p99_admitted_ms / lo.p99_admitted_ms
+             if lo.p99_admitted_ms else 0.0)
+    if ratio > OVERLOAD_P99_GATE:
+        violations.append(
+            f"p99-of-admitted at 4x is {ratio:.2f}x the 1x p99 "
+            f"({hi.p99_admitted_ms:.1f} vs {lo.p99_admitted_ms:.1f} ms) — "
+            f"above the {OVERLOAD_P99_GATE}x gate (admitted latency must "
+            "stay flat under overload; is the queue bound or deadline "
+            "enforcement broken?)"
+        )
+    if hi.goodput_rps < OVERLOAD_GOODPUT_FLOOR * report.capacity_rps:
+        violations.append(
+            f"goodput at 4x collapsed to {hi.goodput_rps:.0f} req/s "
+            f"({hi.goodput_rps / report.capacity_rps:.0%} of the "
+            f"{report.capacity_rps:.0f} req/s capacity, floor "
+            f"{OVERLOAD_GOODPUT_FLOOR:.0%}) — shedding is costing more "
+            "than it saves"
+        )
+    for p in report.points:
+        spilled = sum(p.shed_by_lane[:lowest])
+        if spilled:
+            violations.append(
+                f"at {p.multiple:g}x, {spilled} requests were shed/expired "
+                f"from lanes above the lowest (shed_by_lane="
+                f"{list(p.shed_by_lane)}) — load shedding must stay "
+                "confined to the lowest priority class"
+            )
+        if p.n_failed:
+            violations.append(
+                f"at {p.multiple:g}x, {p.n_failed} requests failed with an "
+                "untyped error — overload must resolve as typed "
+                "ServiceOverloaded/DeadlineExceeded, never a crash"
+            )
+    half = report.point(0.5)
+    if half.shed_rate > 0.05:
+        violations.append(
+            f"at 0.5x capacity {half.shed_rate:.1%} of requests were shed — "
+            "admission control is rejecting traffic the service can serve"
+        )
+    return violations
+
+
+def main_overload(smoke: bool = False):
+    """§14 overload sweep: capacity probe, then 0.5×–4× open-loop points.
+
+    Emits one CSV row per sweep point and hard-fails on the acceptance
+    gates (p99-of-admitted flat within ``OVERLOAD_P99_GATE``, shedding
+    confined to the lowest lane, no goodput collapse, no untyped
+    failures).  Like the obs-overhead gate, a first miss re-measures
+    once before failing — the gates compare two latency tails from short
+    runs, and a shared-machine blip should not fail CI on its own.
+    """
+    from repro.service.server import overload_config, overload_sweep
+
+    duration, capacity_s = (1.2, 1.0) if smoke else (2.0, 1.5)
+    report = overload_sweep(
+        overload_config(), duration_s=duration, capacity_s=capacity_s,
+    )
+    violations = _overload_gates(report)
+    if violations:
+        print(f"# overload gates missed on first measure "
+              f"({len(violations)}) — re-measuring once")
+        report = overload_sweep(
+            overload_config(), duration_s=duration, capacity_s=capacity_s,
+            seed=1,
+        )
+        violations = _overload_gates(report)
+    print("name,us_per_call,derived")
+    print(f"service_overload_capacity,{1e6 / report.capacity_rps:.0f},"
+          f"{report.capacity_rps:.0f}req/s")
+    for p in report.points:
+        tag = f"{p.multiple:g}".replace(".", "p")
+        print(
+            f"service_overload_{tag}x,"
+            f"{1e6 / p.goodput_rps if p.goodput_rps else 0:.0f},"
+            f"goodput={p.goodput_rps:.0f}req/s;shed={p.shed_rate:.2f};"
+            f"expired={p.n_expired};p99_admitted={p.p99_admitted_ms:.1f}ms"
+        )
+    lo, hi = report.point(1.0), report.point(4.0)
+    ratio = (hi.p99_admitted_ms / lo.p99_admitted_ms
+             if lo.p99_admitted_ms else 0.0)
+    print(f"service_overload_p99_admitted_4x,{hi.p99_admitted_ms * 1e3:.0f},"
+          f"ratio_vs_1x={ratio:.2f}x;gate<={OVERLOAD_P99_GATE}x;"
+          f"shed_by_lane={'/'.join(str(s) for s in hi.shed_by_lane)}")
+    if violations:
+        raise RuntimeError(
+            "overload sweep failed the §14 gates:\n  - "
+            + "\n  - ".join(violations)
+        )
+    return report
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -301,5 +416,10 @@ if __name__ == "__main__":
     ap.add_argument("--duration", type=float, default=3.0)
     ap.add_argument("--smoke", action="store_true",
                     help="short run; verifies the zero-recompile gate")
+    ap.add_argument("--overload", action="store_true",
+                    help="run only the §14 overload sweep + gates")
     a = ap.parse_args()
-    main(rate=a.rate, duration=a.duration, smoke=a.smoke)
+    if a.overload:
+        main_overload(smoke=a.smoke)
+    else:
+        main(rate=a.rate, duration=a.duration, smoke=a.smoke)

@@ -12,6 +12,7 @@ Paper artifact → bench mapping:
   kernel hot-spots                     → bench_kernels
   batched multi-problem engine         → bench_batch (EXPERIMENTS.md §Batch)
   online serving layer (DESIGN.md §10) → bench_service (EXPERIMENTS.md §Service)
+  overload sweep + gates (DESIGN.md §14) → bench_service.main_overload
   (arch × shape) roofline table        → roofline_report (reads dryrun.jsonl)
 
 Default sizes are CI-scale; pass --paper for the paper-scale n=1968 run.
@@ -169,6 +170,7 @@ def main() -> None:
         "service": lambda: bench_service.main(
             rate=300.0, duration=3.0 if not args.paper else 10.0,
             smoke=smoke),
+        "service_overload": lambda: bench_service.main_overload(smoke=smoke),
         "scaling": lambda: bench_scaling.main(
             n=n_scale, procs=(1, 2, 4, 8) if not args.paper
             else (1, 2, 4, 8, 16)),

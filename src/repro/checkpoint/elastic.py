@@ -14,28 +14,43 @@ from typing import Any
 
 import jax
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 
 def validate_mesh_for_tree(spec_tree, rules, mesh: Mesh) -> list[str]:
     """Return a list of leaves whose sharded dims don't divide on ``mesh``
-    (empty = mesh is valid for this parameter tree)."""
-    from repro.distributed.sharding import tree_pspecs
+    (empty = mesh is valid for this parameter tree).
 
+    Maps each leaf's logical axes through ``rules`` directly rather than
+    via ``tree_pspecs`` — the pspec mapping *silently replicates* a dim
+    that doesn't divide (the forgiving behavior training wants), which
+    is exactly the failure this validator exists to surface: a mesh
+    shrink that would quietly turn a sharded parameter into a replicated
+    one must fail loudly, naming the leaf, the offending logical axis
+    and the mesh axes it maps to.
+    """
     problems = []
-    pspecs = tree_pspecs(spec_tree, rules, mesh)
-    flat_s = jax.tree_util.tree_flatten_with_path(
-        spec_tree, is_leaf=lambda s: hasattr(s, "axes"))[0]
-    flat_p = jax.tree.flatten(pspecs, is_leaf=lambda p: isinstance(p, P))[0]
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    for (path, spec), pspec in zip(flat_s, flat_p):
-        for dim, part in zip(spec.shape, tuple(pspec) + (None,) * 8):
-            if part is None:
+    flat = jax.tree_util.tree_flatten_with_path(
+        spec_tree, is_leaf=lambda s: hasattr(s, "axes"))[0]
+    for path, spec in flat:
+        used: set[str] = set()
+        for dim, ax in zip(spec.shape, spec.axes):
+            phys = rules.get(ax) if ax else None
+            keep = tuple(
+                p for p in (phys or ()) if p in sizes and p not in used
+            )
+            if not keep:
                 continue
-            parts = (part,) if isinstance(part, str) else tuple(part)
-            total = int(np.prod([sizes[a] for a in parts]))
+            total = int(np.prod([sizes[a] for a in keep]))
             if dim % total:
-                problems.append(f"{path}: dim {dim} % {total} != 0")
+                problems.append(
+                    f"{jax.tree_util.keystr(path) or '<root>'}: dim {dim} "
+                    f"(logical axis {ax!r} -> mesh axes {keep}, size "
+                    f"{total}) does not divide"
+                )
+            else:
+                used.update(keep)
     return problems
 
 

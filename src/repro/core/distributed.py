@@ -537,6 +537,66 @@ def _fault_event(log, msg: str) -> None:
         warnings.warn(msg, RuntimeWarning, stacklevel=3)
 
 
+#: Logical→mesh axis mapping for the sharded chain state: only the
+#: points/summary rows are sharded (over the paper's ring axis); every
+#: bookkeeping leaf is replicated.
+_CHAIN_ROW_RULES = {"rows": (AXIS,)}
+
+
+def _chain_state_specs(n_pad: int, d_pad: int, n: int):
+    """ParamSpec mirror of the sharded chain state tuple, in state order."""
+    from repro.models.common import ParamSpec
+
+    rep = ParamSpec((n_pad,), (None,))
+    scalar = ParamSpec((), ())
+    return (
+        ParamSpec((n_pad, d_pad), ("rows", None)),     # W
+        rep,                                           # u
+        rep,                                           # alive
+        rep,                                           # sizes
+        rep,                                           # chain
+        scalar,                                        # chain_len
+        ParamSpec((n - 1, 4), (None, None)),           # merges
+        scalar,                                        # n_merges
+        scalar,                                        # iters
+    )
+
+
+def _shrink_chain_state(state, fallback_mesh: Mesh, *, n_pad: int,
+                        d_pad: int, n: int, exhausted_p: int, cause, log):
+    """Validate + reshard the live chain state onto the fallback mesh.
+
+    Validation runs BEFORE any state moves
+    (:func:`repro.checkpoint.elastic.validate_mesh_for_tree`), so an
+    incompatible fallback fails with the offending leaves and axes named
+    and the last consistent state still intact on the original mesh.
+    """
+    from repro.checkpoint.elastic import reshard_tree, validate_mesh_for_tree
+    from repro.distributed.sharding import tree_shardings
+
+    mesh2 = require_ring_mesh(fallback_mesh)
+    p2 = int(mesh2.devices.size)
+    specs = _chain_state_specs(n_pad, d_pad, n)
+    problems = validate_mesh_for_tree(specs, _CHAIN_ROW_RULES, mesh2)
+    if problems:
+        raise RuntimeError(
+            f"restart budget exhausted on the p={exhausted_p} mesh, and the "
+            f"fallback mesh (p={p2}) cannot hold the sharded chain state:"
+            "\n  " + "\n  ".join(problems) + "\n"
+            "the last consistent state is still on the original mesh — "
+            "pick a fallback whose size divides the padded row count"
+        ) from cause
+    _fault_event(
+        log,
+        f"[fault] restart budget exhausted on p={exhausted_p} — resharding "
+        f"the chain state onto the p={p2} fallback mesh and continuing "
+        "(same segment, fresh budget; no merges lost)",
+    )
+    return mesh2, reshard_tree(
+        state, tree_shardings(specs, _CHAIN_ROW_RULES, mesh2)
+    )
+
+
 def distributed_nn_chain_from_points(
     X,
     method: str = "ward",
@@ -548,6 +608,7 @@ def distributed_nn_chain_from_points(
     segment_steps: int | None = None,
     failure_plan=None,
     max_restarts: int = 2,
+    fallback_mesh: Mesh | None = None,
     deadline: StepDeadline | None = None,
     log=None,
     tracer: Tracer | None = None,
@@ -580,6 +641,16 @@ def distributed_nn_chain_from_points(
     bounded by ``max_restarts`` (then a diagnosable ``RuntimeError``).
     A :class:`~repro.distributed.fault.StepDeadline` flags straggling
     segments (delayed shard) through ``log``/``RuntimeWarning``.
+
+    **Elastic shrink** (:mod:`repro.checkpoint.elastic`): with a
+    ``fallback_mesh``, exhausting the restart budget does not kill the
+    run — the sharded state is validated against the fallback
+    (:func:`~repro.checkpoint.elastic.validate_mesh_for_tree`; an
+    incompatible mesh raises a ``RuntimeError`` naming the offending
+    leaves and axes *before* any state moves), resharded onto it
+    (:func:`~repro.checkpoint.elastic.reshard_tree`), and the same
+    segment retried there with a fresh restart budget.  One shrink per
+    run — a mesh that keeps failing has a problem restarts can't fix.
 
     **Telemetry** (DESIGN.md §13): the returned
     :class:`DistributedChainResult` carries ``restarts`` /
@@ -649,6 +720,9 @@ def distributed_nn_chain_from_points(
     straggler_counter = reg.counter(
         "distributed_chain_straggler_segments_total",
         "Segments past the straggler deadline")
+    shrink_counter = reg.counter(
+        "distributed_chain_shrinks_total",
+        "Elastic reshard-to-fallback-mesh events")
     done, seg_idx, restarts, stragglers = 0, 0, 0, 0
     while done < n_steps:
         target = min(done + seg, n_steps)
@@ -669,14 +743,28 @@ def distributed_nn_chain_from_points(
                 segment=seg_idx, error="shard-lost", restarts=restarts,
             )
             if restarts > max_restarts:
-                raise RuntimeError(
-                    f"distributed NN-chain lost a shard at segment "
-                    f"{seg_idx} and exceeded max_restarts={max_restarts} "
-                    f"(committed {done}/{n_steps} merges, p={p}, n={n}); "
-                    "the last consistent sharded state is still on the "
-                    "mesh — re-dispatch with a fresh failure budget to "
-                    "continue"
-                ) from e
+                if fallback_mesh is None:
+                    raise RuntimeError(
+                        f"distributed NN-chain lost a shard at segment "
+                        f"{seg_idx} and exceeded max_restarts={max_restarts} "
+                        f"(committed {done}/{n_steps} merges, p={p}, n={n}); "
+                        "the last consistent sharded state is still on the "
+                        "mesh — re-dispatch with a fresh failure budget to "
+                        "continue, or pass fallback_mesh= to shrink "
+                        "elastically"
+                    ) from e
+                # elastic shrink: validate (loudly, naming offending
+                # leaves/axes) then reshard the live state; same segment
+                # retried on the smaller mesh with a fresh budget
+                mesh, state = _shrink_chain_state(
+                    state, fallback_mesh, n_pad=n_pad, d_pad=d_pad, n=n,
+                    exhausted_p=p, cause=e, log=log,
+                )
+                p = int(mesh.devices.size)
+                fallback_mesh = None    # one shrink per run
+                restarts = 0
+                shrink_counter.inc()
+                continue
             _fault_event(
                 log,
                 f"[fault] {e} — retrying segment {seg_idx} "

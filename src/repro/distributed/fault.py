@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable
+from typing import Callable, Iterator
 
 from repro.obs import get_registry
 
@@ -74,6 +74,80 @@ class StepDeadline:
                 "Steps/segments flagged past the straggler deadline",
             )
         return exceeded
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff — the ONE retry shape in the repo.
+
+    ``attempts`` counts *total* tries (1 = no retry).  ``delays()``
+    yields the sleep before each retry: ``base × multiplier^k`` capped
+    at ``max_delay_s``.  Deterministic (no jitter) so tests and the
+    segmented distributed driver replay identically; callers that need
+    jitter add it on top.
+
+    Used by the service dispatcher for transient engine failures
+    (DESIGN.md §14) and available to the distributed chain's segment
+    retry — both count their retries on the metrics registry.
+    """
+
+    attempts: int = 3
+    base_delay_s: float = 0.01
+    multiplier: float = 2.0
+    max_delay_s: float = 1.0
+
+    def __post_init__(self) -> None:
+        if self.attempts < 1:
+            raise ValueError(f"attempts must be >= 1, got {self.attempts}")
+        if self.base_delay_s < 0 or self.max_delay_s < 0:
+            raise ValueError("backoff delays must be >= 0")
+        if self.multiplier < 1.0:
+            raise ValueError(
+                f"multiplier must be >= 1 (backoff never shrinks), got "
+                f"{self.multiplier}"
+            )
+
+    def delays(self) -> Iterator[float]:
+        """The sleep before retry k (``attempts - 1`` values)."""
+        d = self.base_delay_s
+        for _ in range(self.attempts - 1):
+            yield min(d, self.max_delay_s)
+            d *= self.multiplier
+
+
+def retry_call(
+    fn: Callable[[], object],
+    policy: RetryPolicy,
+    *,
+    retry_if: Callable[[BaseException], bool] = lambda e: True,
+    on_retry: Callable[[int, BaseException], None] | None = None,
+    sleep: Callable[[float], None] = time.sleep,
+):
+    """Call ``fn`` under ``policy``; re-raise the last error when the
+    budget is spent or ``retry_if`` declines.
+
+    Every performed retry lands on the process-global
+    ``fault_retries_total`` counter; ``on_retry(attempt, exc)`` lets the
+    caller add its own telemetry (the service counts
+    ``service_retries_total`` there).
+    """
+    delays = policy.delays()
+    attempt = 1
+    while True:
+        try:
+            return fn()
+        except BaseException as exc:  # noqa: BLE001 — predicate decides
+            delay = next(delays, None)
+            if delay is None or not retry_if(exc):
+                raise
+            _count_fault(
+                "fault_retries_total",
+                "Bounded-backoff retries performed by retry_call",
+            )
+            if on_retry is not None:
+                on_retry(attempt, exc)
+            sleep(delay)
+            attempt += 1
 
 
 def run_resilient_loop(

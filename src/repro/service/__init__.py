@@ -7,11 +7,16 @@ cache with LRU eviction and declarative warmup
 (:mod:`~repro.service.cache`) so steady-state traffic never compiles,
 and a streaming-assignment path (:mod:`~repro.service.assign`) that
 labels new points against a fitted dendrogram cut with one
-pairwise-distance call instead of a re-cluster.  A synthetic open-loop
-load driver lives in :mod:`~repro.service.server`
+pairwise-distance call instead of a re-cluster.  Overload safety
+(DESIGN.md §14) lives in :mod:`~repro.service.admission` (bounded
+priority-laned admission control), :mod:`~repro.service.errors` (the
+typed decline taxonomy) and :mod:`~repro.service.worker` (the
+supervised watchdog worker).  Synthetic open- and closed-loop load
+drivers live in :mod:`~repro.service.server`
 (``python -m repro.service.server``).
 """
 
+from repro.service.admission import OVERLOAD_POLICIES, AdmissionQueue
 from repro.service.assign import AssignIndex, assign, build_index
 from repro.service.batcher import (
     ClusteringService,
@@ -25,17 +30,36 @@ from repro.service.cache import (
     engine_jit_cache_size,
     warmup_signatures,
 )
+from repro.service.errors import (
+    DeadlineExceeded,
+    ServiceClosed,
+    ServiceError,
+    ServiceOverloaded,
+    WorkerWedged,
+    is_transient,
+)
+from repro.service.worker import BucketWorker, Watchdog
 
 __all__ = [
+    "AdmissionQueue",
     "AssignIndex",
+    "BucketWorker",
     "CacheStats",
     "ClusteringService",
     "CompileCache",
+    "DeadlineExceeded",
     "MetricsSnapshot",
+    "OVERLOAD_POLICIES",
+    "ServiceClosed",
     "ServiceConfig",
+    "ServiceError",
     "ServiceMetrics",
+    "ServiceOverloaded",
+    "Watchdog",
+    "WorkerWedged",
     "assign",
     "build_index",
     "engine_jit_cache_size",
+    "is_transient",
     "warmup_signatures",
 ]

@@ -38,16 +38,29 @@ tolerance) and a matrix-free result stores no ``distances``.  LW and
 nnchain buckets grouped out of the same window never share a
 :class:`~repro.core.batched.BucketSignature` (distinct ``algorithm`` /
 ``points_dim`` fields), so they cannot collide in the compile cache.
+
+**Overload safety (DESIGN.md §14).**  Submission runs through a
+bounded, priority-laned, quota-aware
+:class:`~repro.service.admission.AdmissionQueue` (policy: ``block`` /
+``reject`` / ``shed-oldest``); declined requests resolve with typed
+:class:`~repro.service.errors.ServiceOverloaded` instead of queueing
+without bound.  Per-request deadlines are enforced *before* a bucket is
+padded (a dead request never costs engine time), transient engine
+failures get a bounded backoff-retry
+(:class:`repro.distributed.fault.RetryPolicy`), and bucket execution
+runs on a supervised :class:`~repro.service.worker.Watchdog` worker —
+a wedged engine call fails only its own bucket, the worker is replaced,
+and the warmed :class:`~repro.service.cache.CompileCache` survives so
+recovery performs zero recompiles.
 """
 
 from __future__ import annotations
 
-import queue
 import threading
 import time
 from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -66,13 +79,22 @@ from repro.core.batched import (
 from repro.core.engine import VARIANTS
 from repro.core.linkage import METHODS
 from repro.core.nnchain import POINTS_METHODS, resolve_batch_algorithm
+from repro.distributed.fault import RetryPolicy, retry_call
 from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
+from repro.service.admission import OVERLOAD_POLICIES, AdmissionQueue
 from repro.service.cache import (
     CACHEABLE_ENGINES,
     CompileCache,
     _sig_label,
     warmup_signatures,
 )
+from repro.service.errors import (
+    DeadlineExceeded,
+    ServiceClosed,
+    ServiceOverloaded,
+    is_transient,
+)
+from repro.service.worker import Watchdog
 
 
 @dataclass(frozen=True)
@@ -110,6 +132,31 @@ class ServiceConfig:
     max_delay_ms: float = 2.0          # batching window opened by first request
     bucket_ns: tuple[int, ...] = (8, 16, 32, 64)
     cache_capacity: int = 64
+    # -- §14 admission control / overload policy ----------------------------
+    # bound on queued (not yet dispatched) requests across all lanes
+    max_queue: int = 1024
+    # at the bound: 'block' the submitter (backpressure), 'reject' the
+    # newcomer, or 'shed-oldest' (evict the oldest request of the lowest
+    # lane not above the newcomer's — freshest-first load shedding)
+    overload_policy: str = "block"
+    # priority lanes, 0 = highest; shedding drops the lowest class first
+    n_lanes: int = 3
+    default_lane: int = 1              # middle lane when submit() names none
+    # max queued requests one tenant may hold (None = no quota); request
+    # quota+1 is rejected typed regardless of policy, so a flooding
+    # tenant cannot block or shed its neighbours
+    tenant_quota: int | None = None
+    # deadline stamped on requests that don't bring one (None = no
+    # deadline); expired requests are shed BEFORE their bucket is padded
+    default_deadline_ms: float | None = None
+    # -- §14 retry + watchdog -----------------------------------------------
+    max_retries: int = 2               # backoff-retries per bucket on
+    retry_backoff_ms: float = 10.0     # transient engine failures
+    # watchdog: a bucket running past the hard deadline fails (typed
+    # WorkerWedged) and the supervised worker is replaced; the soft
+    # deadline (factor x running median) only counts stragglers
+    hard_deadline_ms: float | None = 30_000.0
+    soft_deadline_factor: float = 3.0
 
     def __post_init__(self) -> None:
         if self.method not in METHODS:
@@ -147,6 +194,51 @@ class ServiceConfig:
         if self.compaction not in (True, False, "auto"):
             raise ValueError(
                 f"compaction must be a bool or 'auto', got {self.compaction!r}"
+            )
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.overload_policy not in OVERLOAD_POLICIES:
+            raise ValueError(
+                f"overload_policy must be one of {OVERLOAD_POLICIES}, got "
+                f"{self.overload_policy!r}"
+            )
+        if not 1 <= self.n_lanes <= 8:
+            raise ValueError(
+                f"n_lanes must be in [1, 8] (2-3 covers real tiers), got "
+                f"{self.n_lanes}"
+            )
+        if not 0 <= self.default_lane < self.n_lanes:
+            raise ValueError(
+                f"default_lane must be in [0, {self.n_lanes}), got "
+                f"{self.default_lane}"
+            )
+        if self.tenant_quota is not None and self.tenant_quota < 1:
+            raise ValueError(
+                f"tenant_quota must be >= 1 or None, got {self.tenant_quota}"
+            )
+        if (self.default_deadline_ms is not None
+                and self.default_deadline_ms <= 0):
+            raise ValueError(
+                f"default_deadline_ms must be > 0 or None, got "
+                f"{self.default_deadline_ms}"
+            )
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}"
+            )
+        if self.retry_backoff_ms < 0:
+            raise ValueError(
+                f"retry_backoff_ms must be >= 0, got {self.retry_backoff_ms}"
+            )
+        if self.hard_deadline_ms is not None and self.hard_deadline_ms <= 0:
+            raise ValueError(
+                f"hard_deadline_ms must be > 0 or None, got "
+                f"{self.hard_deadline_ms}"
+            )
+        if self.soft_deadline_factor <= 1.0:
+            raise ValueError(
+                f"soft_deadline_factor must be > 1, got "
+                f"{self.soft_deadline_factor}"
             )
         for n in self.bucket_ns:
             if n not in BUCKETS:
@@ -187,6 +279,13 @@ class MetricsSnapshot:
     started_at: float = 0.0     # service start, seconds since the epoch
     uptime_s: float = 0.0       # monotonic seconds since service start
     throughput_rps: float = 0.0  # n_requests / uptime_s
+    # §14 overload accounting (trailing defaults keep old constructions
+    # valid, same convention as the timebase fields above)
+    n_shed: int = 0             # admission-control drops (all reasons)
+    n_deadline_expired: int = 0  # requests whose deadline passed queued
+    n_retries: int = 0          # transient-failure bucket retries
+    n_worker_restarts: int = 0  # wedged-worker replacements
+    n_stragglers: int = 0       # buckets past the soft deadline
 
 
 class ServiceMetrics:
@@ -219,6 +318,24 @@ class ServiceMetrics:
         self._latency = self.registry.histogram(
             "service_request_latency_ms", "submit→resolve latency",
             window=window)
+        # §14 overload / robustness instruments
+        self._shed = self.registry.counter(
+            "service_shed_total",
+            "Requests dropped by admission control (by reason and lane)")
+        self._expired = self.registry.counter(
+            "service_deadline_expired_total",
+            "Requests shed because their deadline passed while queued")
+        self._retries = self.registry.counter(
+            "service_retries_total",
+            "Bucket dispatches retried on a transient engine failure")
+        self._restarts = self.registry.counter(
+            "service_worker_restarts_total",
+            "Supervised workers replaced after a hard-deadline wedge")
+        self._stragglers = self.registry.counter(
+            "service_straggler_buckets_total",
+            "Buckets past the soft (factor x median) deadline")
+        self._queue_depth = self.registry.gauge(
+            "service_queue_depth", "Queued requests by priority lane")
 
     # original scalar attributes, now registry-backed reads
     @property
@@ -241,12 +358,58 @@ class ServiceMetrics:
     def cells_padded(self) -> int:
         return int(self._cells.value(kind="padded"))
 
+    @property
+    def n_shed(self) -> int:
+        return int(self._shed.total())
+
+    @property
+    def n_deadline_expired(self) -> int:
+        return int(self._expired.total())
+
+    @property
+    def n_retries(self) -> int:
+        return int(self._retries.total())
+
+    @property
+    def n_worker_restarts(self) -> int:
+        return int(self._restarts.total())
+
+    @property
+    def n_stragglers(self) -> int:
+        return int(self._stragglers.total())
+
     def observe_request(self, latency_ms: float) -> None:
         self._requests.inc()
         self._latency.observe(latency_ms)
 
     def observe_failure(self) -> None:
         self._failed.inc()
+
+    def observe_shed(self, reason: str, lane: int) -> None:
+        self._shed.inc(reason=reason, lane=lane)
+
+    def observe_expired(self, lane: int) -> None:
+        self._expired.inc(lane=lane)
+
+    def observe_retry(self) -> None:
+        self._retries.inc()
+
+    def observe_worker_restart(self) -> None:
+        self._restarts.inc()
+
+    def observe_straggler(self) -> None:
+        self._stragglers.inc()
+
+    def observe_queue_depths(self, depths: Sequence[int]) -> None:
+        for lane, depth in enumerate(depths):
+            self._queue_depth.set(depth, lane=lane)
+
+    def shed_by_lane(self, lane: int) -> int:
+        """Admission drops charged to one lane (all reasons)."""
+        return int(sum(
+            self._shed.value(reason=r, lane=lane)
+            for r in ("queue-full", "quota", "shed")
+        ))
 
     def observe_bucket(self, cells_real: int, cells_padded: int) -> None:
         self._batches.inc()
@@ -271,6 +434,11 @@ class ServiceMetrics:
             started_at=self.started_at,
             uptime_s=uptime,
             throughput_rps=n_req / uptime if uptime > 0 else 0.0,
+            n_shed=self.n_shed,
+            n_deadline_expired=self.n_deadline_expired,
+            n_retries=self.n_retries,
+            n_worker_restarts=self.n_worker_restarts,
+            n_stragglers=self.n_stragglers,
         )
 
 
@@ -286,14 +454,19 @@ class _Job:
     n: int = 0                  # problem size (leaves)
     trace_id: int = 0           # per-request id threading the span story
     done: bool = False          # guarded by the service condition lock
+    lane: int = 0               # priority lane (0 = highest)
+    tenant: str | None = None   # quota bucket
+    deadline: float | None = None   # absolute perf_counter deadline
 
 
 class ClusteringService:
     """The continuous-batching clustering server.
 
-    One background dispatcher thread owns all engine dispatch (jax calls
-    never race); callers interact only through :meth:`submit` futures.
-    Use as a context manager, or call :meth:`close`.
+    One background dispatcher thread owns batching and bucket order;
+    engine calls run serially on its supervised :class:`Watchdog` worker
+    (jax calls never race — the dispatcher waits on each bucket, but can
+    abandon a wedged one).  Callers interact only through :meth:`submit`
+    futures.  Use as a context manager, or call :meth:`close`.
     """
 
     def __init__(
@@ -303,8 +476,10 @@ class ClusteringService:
         cache: CompileCache | None = None,
         registry: MetricsRegistry | None = None,
         tracer: Tracer | None = None,
+        execute_hook: Callable | None = None,
     ) -> None:
         self.config = config or ServiceConfig()
+        cfg = self.config
         self.tracer = tracer or NULL_TRACER
         # one registry per service (two services in one process must not
         # double-count); a caller-built cache brings its own, adopt it
@@ -318,10 +493,32 @@ class ClusteringService:
                 registry=self.registry, tracer=self.tracer,
             )
         self.metrics = ServiceMetrics(registry=self.registry)
-        self._queue: queue.Queue[_Job] = queue.Queue()
+        # fault-injection point (tests, overload bench): called on the
+        # worker thread with the BucketSignature right before the cache
+        # fetch + engine call — raise to simulate a transient failure,
+        # sleep past hard_deadline_ms to simulate a wedge
+        self._execute_hook = execute_hook
+        self._queue = AdmissionQueue(
+            max_queue=cfg.max_queue,
+            n_lanes=cfg.n_lanes,
+            policy=cfg.overload_policy,
+            tenant_quota=cfg.tenant_quota,
+        )
+        self._retry_policy = RetryPolicy(
+            attempts=cfg.max_retries + 1,
+            base_delay_s=cfg.retry_backoff_ms / 1e3,
+        )
+        self._watchdog = Watchdog(
+            hard_deadline_s=(
+                None if cfg.hard_deadline_ms is None
+                else cfg.hard_deadline_ms / 1e3
+            ),
+            soft_factor=cfg.soft_deadline_factor,
+            on_straggler=lambda dt: self.metrics.observe_straggler(),
+            on_restart=lambda gen: self.metrics.observe_worker_restart(),
+        )
         self._pending = 0
         self._cond = threading.Condition()
-        self._closing = threading.Event()
         self._thread = threading.Thread(
             target=self._loop, name="lw-service-batcher", daemon=True
         )
@@ -370,15 +567,24 @@ class ClusteringService:
 
     def close(self, timeout: float | None = 30.0) -> None:
         """Stop the service: the in-flight batch completes, still-queued
-        requests fail fast with "service is closed" (call :meth:`flush`
-        first if you want queued work served), the thread stops.
+        requests fail fast with typed :class:`ServiceClosed` (call
+        :meth:`flush` first if you want queued work served), the
+        dispatcher and worker threads stop.
+
+        The closed flag and the queue sweep happen in ONE admission-lock
+        critical section (:meth:`AdmissionQueue.close_and_drain`), so a
+        ``submit`` racing with close either lands in the sweep or
+        observes closed — no future is ever stranded unresolved
+        (``tests/test_service_robustness.py`` hammers this).
 
         Raises if the dispatcher is still mid-dispatch after ``timeout``
         (e.g. stuck in a long on-demand compile) — silently returning
         would strand that batch's futures unresolved forever once the
         daemon thread dies with the interpreter.
         """
-        self._closing.set()
+        swept = self._queue.close_and_drain()
+        for job in swept:
+            self._finish(job, error=ServiceClosed("service is closed"))
         self._thread.join(timeout)
         if self._thread.is_alive():
             raise RuntimeError(
@@ -386,7 +592,7 @@ class ClusteringService:
                 "in-flight work is still running — its futures are not "
                 "resolved yet (retry close() with a larger timeout)"
             )
-        self._drain_closed()
+        self._watchdog.stop()
 
     # -- request path -------------------------------------------------------
 
@@ -396,6 +602,9 @@ class ClusteringService:
         *,
         metric: str | None = None,
         is_distance: bool | None = None,
+        priority: int | None = None,
+        tenant: str | None = None,
+        deadline_ms: float | None = None,
     ) -> Future:
         """Enqueue one clustering request; returns a Future[ClusterResult].
 
@@ -404,15 +613,34 @@ class ClusteringService:
         thread, keeping the dispatcher free for engine calls).  Invalid
         requests resolve the future with the error instead of raising,
         so one bad request cannot take down a submission loop.
+
+        §14 knobs: ``priority`` picks the lane (0 highest; default
+        ``config.default_lane``), ``tenant`` the quota bucket, and
+        ``deadline_ms`` the submit-relative deadline (default
+        ``config.default_deadline_ms``).  Admission declines resolve the
+        future with typed :class:`ServiceOverloaded` /
+        :class:`DeadlineExceeded` / :class:`ServiceClosed` — never a
+        raise, never an unbounded queue.
         """
         fut: Future = Future()
-        if self._closing.is_set():
-            fut.set_exception(RuntimeError("service is closed"))
+        if self._queue.closed:
+            fut.set_exception(ServiceClosed("service is closed"))
             return fut
         trace_id = self.tracer.new_trace_id()
         t_sub0 = time.perf_counter()
+        cfg = self.config
+        lane = cfg.default_lane if priority is None else int(priority)
         try:
-            cfg = self.config
+            if not 0 <= lane < cfg.n_lanes:
+                raise ValueError(
+                    f"priority must be in [0, {cfg.n_lanes}), got {lane}"
+                )
+            if deadline_ms is None:
+                deadline_ms = cfg.default_deadline_ms
+            elif deadline_ms <= 0:
+                raise ValueError(
+                    f"deadline_ms must be > 0, got {deadline_ms}"
+                )
             D, points, used_metric = _interpret_input(
                 data, cfg.method, metric, is_distance, materialize=False
             )
@@ -453,31 +681,60 @@ class ClusteringService:
         t_sub1 = time.perf_counter()
         self.tracer.add_span(
             "submit", t_sub0, t_sub1,
-            trace_id=trace_id, n=n, matrix_free=mat is None,
+            trace_id=trace_id, n=n, matrix_free=mat is None, lane=lane,
+        )
+        job = _Job(
+            mat, points, used_metric, fut, t_sub1, n=n, trace_id=trace_id,
+            lane=lane, tenant=tenant,
+            deadline=(
+                None if deadline_ms is None else t_sub1 + deadline_ms / 1e3
+            ),
         )
         with self._cond:
             self._pending += 1
-        self._queue.put(
-            _Job(mat, points, used_metric, fut, t_sub1, n=n,
-                 trace_id=trace_id)
-        )
-        if self._closing.is_set():
-            # close() may have drained the queue between our closing check
-            # and the put — make sure this job cannot be stranded
-            self._drain_closed()
+        decision = self._queue.offer(job)   # may block (policy='block')
+        for victim in decision.victims:
+            self._shed(victim, reason="shed")
+        if not decision.admitted:
+            reason = decision.rejected_reason
+            if reason == "closed":
+                self._finish(job, error=ServiceClosed("service is closed"))
+            elif reason == "deadline":
+                self._expire(job)
+            else:
+                self._shed(job, reason=reason)
+        self.metrics.observe_queue_depths(self._queue.depths())
         return fut
 
     def submit_many(self, datas: Sequence, **kw) -> list[Future]:
         return [self.submit(d, **kw) for d in datas]
 
-    def _drain_closed(self) -> None:
-        """Fail whatever is left in the queue of a closed service."""
-        while True:
-            try:
-                job = self._queue.get_nowait()
-            except queue.Empty:
-                return
-            self._finish(job, error=RuntimeError("service is closed"))
+    def _shed(self, job: _Job, *, reason: str) -> None:
+        """Resolve one admission-control drop: typed error + counter + span."""
+        t0 = time.perf_counter()
+        self.metrics.observe_shed(reason, job.lane)
+        self._finish(job, error=ServiceOverloaded(
+            f"request shed by admission control ({reason}; lane={job.lane}"
+            + (f", tenant={job.tenant!r}" if job.tenant else "") + ")",
+            reason=reason, lane=job.lane, tenant=job.tenant,
+        ), count_failure=False)
+        self.tracer.add_span(
+            "shed", t0, time.perf_counter(),
+            trace_id=job.trace_id, reason=reason, lane=job.lane,
+        )
+
+    def _expire(self, job: _Job) -> None:
+        """Resolve one expired-deadline request (shed before any padding)."""
+        t0 = time.perf_counter()
+        self.metrics.observe_expired(job.lane)
+        self._finish(job, error=DeadlineExceeded(
+            f"deadline expired after "
+            f"{(t0 - job.t_submit) * 1e3:.1f} ms in queue (lane={job.lane})"
+        ), count_failure=False)
+        self.tracer.add_span(
+            "deadline_expired", t0, time.perf_counter(),
+            trace_id=job.trace_id, lane=job.lane,
+        )
 
     # -- dispatcher ---------------------------------------------------------
 
@@ -485,43 +742,55 @@ class ClusteringService:
         cfg = self.config
         self.tracer.name_thread("lw-service-batcher")
         while True:
-            try:
-                first = self._queue.get(timeout=0.02)
-            except queue.Empty:
-                if self._closing.is_set():
-                    return
-                continue
-            if self._closing.is_set():
-                # fast shutdown: fail still-queued work instead of serving
-                # it (close() would otherwise block on an unbounded backlog
-                # — callers that want completion flush() before close())
-                self._finish(first, error=RuntimeError("service is closed"))
-                continue
+            # event-driven wakeup: an idle dispatcher sleeps in the
+            # admission queue's Condition (no 20 ms poll) and wakes on the
+            # next offer; None here means closed-and-drained → exit
+            first = self._queue.take()
+            if first is None:
+                return
             batch = [first]
             deadline = time.perf_counter() + cfg.max_delay_ms / 1e3
             while len(batch) < cfg.max_batch:
                 remaining = deadline - time.perf_counter()
                 if remaining <= 0:
                     break
-                try:
-                    batch.append(self._queue.get(timeout=remaining))
-                except queue.Empty:
-                    break
+                job = self._queue.take(timeout=remaining)
+                if job is None:     # window elapsed (or service closing) —
+                    break           # dispatch what arrived either way
+                batch.append(job)
+            self.metrics.observe_queue_depths(self._queue.depths())
             try:
                 self._dispatch(batch)
             except Exception as exc:  # noqa: BLE001 — the thread must survive
                 for job in batch:   # _finish is idempotent per job
                     self._finish(job, error=exc)
 
+    def _reap_expired(self, jobs: list[_Job]) -> list[_Job]:
+        """Split out and resolve (typed) the jobs whose deadline passed."""
+        now = time.perf_counter()
+        live: list[_Job] = []
+        for job in jobs:
+            if job.deadline is not None and now > job.deadline:
+                self._expire(job)
+            else:
+                live.append(job)
+        return live
+
     def _dispatch(self, jobs: list[_Job]) -> None:
         # (bucket_n, matrix-free dim or 0): LW and nnchain buckets may
         # coexist in one window — distinct keys, distinct signatures
         groups: dict[tuple[int, int], list[_Job]] = {}
-        for job in jobs:
+        for job in self._reap_expired(jobs):
             pdim = job.points.shape[1] if job.matrix is None else 0
             groups.setdefault((bucket_n(job.n), pdim), []).append(job)
         for key in sorted(groups):
-            group = groups[key]
+            # re-check per bucket: earlier buckets of the same window may
+            # have consumed the budget — an expired job is shed HERE,
+            # before it can pad a bucket or touch an engine (_run_bucket
+            # never sees one; tests/test_service_robustness.py asserts it)
+            group = self._reap_expired(groups[key])
+            if not group:
+                continue
             try:
                 self._run_bucket(key, group)
             except Exception as exc:  # noqa: BLE001 — fail the bucket's futures
@@ -545,18 +814,6 @@ class ClusteringService:
             algorithm=cfg.algorithm,
             points_dim=pdim,
         )
-        # the dispatcher is the cache's only caller here, so a before/after
-        # hit-count read classifies this lookup; the cache's own compile
-        # span (on a miss) nests inside by time containment
-        hits_before = self.cache.stats.hits
-        t_cache0 = time.perf_counter()
-        fn = self.cache.get(sig)
-        t_cache1 = time.perf_counter()
-        tracer.add_span(
-            "cache", t_cache0, t_cache1, cat="cache",
-            hit=self.cache.stats.hits > hits_before,
-        )
-
         # same pack/slice helpers as the offline scheduler — one rule set
         thr = jnp.float32(
             0.0 if cfg.distance_threshold is None else cfg.distance_threshold
@@ -566,22 +823,51 @@ class ClusteringService:
             Xb, n_real = pack_points_bucket([j.points for j in group], sig)
             cells_real = sum(j.n * pdim for j in group)
             cells_padded = sig.bucket_B * n_pad * pdim
+            operand = jnp.asarray(Xb)
         else:
             Db, n_real = pack_bucket([j.matrix for j in group], sig)
             cells_real = sum(j.n ** 2 for j in group)
             cells_padded = sig.bucket_B * n_pad * n_pad
+            operand = jnp.asarray(Db)
+        n_real_dev = jnp.asarray(n_real)
         t_pack1 = time.perf_counter()
         tracer.add_span("pack", t_pack0, t_pack1, n_jobs=len(group))
-        if pdim:
-            res = fn(jnp.asarray(Xb), jnp.asarray(n_real), thr)
-        else:
-            res = fn(jnp.asarray(Db), jnp.asarray(n_real), thr)
-        merges = np.asarray(res.merges)    # device sync — execute span ends
-        n_merges = np.asarray(res.n_merges)
-        t_done = time.perf_counter()
-        tracer.add_span(
-            "execute", t_pack1, t_done, cat="device",
-            bucket_n=n_pad, bucket_B=sig.bucket_B,
+
+        def execute():
+            # runs on the supervised worker thread (§14): the dispatcher
+            # waits under the hard watchdog deadline and can abandon a
+            # wedged engine call instead of dying with it.  The cache
+            # fetch rides along so an on-demand compile is covered by the
+            # same deadline as the run it feeds.
+            if self._execute_hook is not None:
+                self._execute_hook(sig)
+            hits_before = self.cache.stats.hits
+            t_cache0 = time.perf_counter()
+            fn = self.cache.get(sig)
+            t_cache1 = time.perf_counter()
+            tracer.add_span(
+                "cache", t_cache0, t_cache1, cat="cache",
+                hit=self.cache.stats.hits > hits_before,
+            )
+            res = fn(operand, n_real_dev, thr)
+            m = np.asarray(res.merges)     # device sync — execute span ends
+            nm = np.asarray(res.n_merges)
+            t_exec1 = time.perf_counter()
+            tracer.add_span(
+                "execute", t_cache1, t_exec1, cat="device",
+                bucket_n=n_pad, bucket_B=sig.bucket_B,
+            )
+            return m, nm, t_exec1
+
+        # transient failures (a poisoned runtime call, device OOM) get a
+        # bounded backoff-retry; a wedge raises typed WorkerWedged (a
+        # ServiceError → non-transient) up to _dispatch, failing exactly
+        # this bucket's futures while the watchdog replaces the worker
+        merges, n_merges, t_done = retry_call(
+            lambda: self._watchdog.run(execute),
+            self._retry_policy,
+            retry_if=is_transient,
+            on_retry=lambda attempt, exc: self.metrics.observe_retry(),
         )
 
         self.metrics.observe_bucket(
@@ -637,13 +923,16 @@ class ClusteringService:
         result: ClusterResult | None = None,
         error: Exception | None = None,
         t_done: float | None = None,
+        count_failure: bool = True,
     ) -> None:
         """Resolve one job exactly once — idempotent and cancel-safe.
 
         A client may have cancelled the future (or the error path may
         revisit a job its bucket already resolved); neither is allowed
         to raise into the dispatcher thread or double-count
-        ``_pending``.
+        ``_pending``.  ``count_failure=False`` is the shed/expired path:
+        those land on their own §14 counters, not ``service_failed_total``
+        (an overload drop is a policy outcome, not a broken request).
         """
         with self._cond:
             if job.done:
@@ -651,7 +940,8 @@ class ClusteringService:
             job.done = True
         try:
             if error is not None:
-                self.metrics.observe_failure()
+                if count_failure:
+                    self.metrics.observe_failure()
                 job.future.set_exception(error)
             else:
                 self.metrics.observe_request(

@@ -15,6 +15,12 @@ path with an *explicit* cache of AOT-compiled executables
 * **warmable** — :func:`warmup_signatures` enumerates every signature a
   declared traffic mix can touch (bucket grid × padded batch sizes), so
   a service warms up before taking traffic and then never compiles.
+* **restart-durable** — the cache is owned by the *service*, not by the
+  worker thread that executes buckets (§14): when the watchdog abandons
+  a wedged worker and installs a replacement, the warmed executables
+  survive, so the first request after recovery is a cache hit — the
+  zero-recompile contract holds across worker generations
+  (``tests/test_service_robustness.py``).
 
 Steady-state dispatch goes exclusively through these AOT executables;
 :func:`engine_jit_cache_size` reads the *implicit* jit caches of the

@@ -1,4 +1,4 @@
-"""Synthetic open-loop load driver + metrics report for the service.
+"""Synthetic load drivers (open- and closed-loop) + metrics reports.
 
 Drives a :class:`~repro.service.batcher.ClusteringService` with an
 open-loop Poisson arrival process (arrivals are scheduled independently
@@ -9,6 +9,15 @@ waste, cache hit rate, and — the §10 invariant — compiles performed
 after warmup.
 
     PYTHONPATH=src python -m repro.service.server --rate 200 --duration 3
+
+The closed loop has its one honest use — measuring *capacity* (a
+saturated closed loop cannot overload itself, so its completion rate IS
+the service's sustainable throughput) — and :func:`overload_sweep`
+builds on it: measure capacity closed-loop, then drive open-loop at
+0.5×–4× that capacity with a priority-lane traffic mix and per-request
+deadlines, reporting goodput, shed rate and p99-of-admitted at each
+multiple (DESIGN.md §14; ``--overload`` from the CLI, gated in CI by
+``benchmarks/bench_service.py::main_overload``).
 
 Problem matrices are pre-generated with numpy (no jax on the submit
 path) so the generator measures the service, not itself.
@@ -25,6 +34,7 @@ at exit); ``--prometheus`` prints the text exposition to stdout.
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 from concurrent.futures import Future
 from dataclasses import dataclass
@@ -34,6 +44,7 @@ import numpy as np
 from repro.obs import PeriodicDumper, Tracer, dump_json, prometheus_text
 from repro.service.batcher import ClusteringService, MetricsSnapshot, ServiceConfig
 from repro.service.cache import engine_jit_cache_size
+from repro.service.errors import DeadlineExceeded, ServiceOverloaded
 
 
 def synthetic_problem(rng: np.random.Generator, n: int, dim: int = 8) -> np.ndarray:
@@ -120,6 +131,248 @@ def run_load(
         t_next += rng.exponential(1.0 / rate_hz)
     drained = service.flush(timeout=120.0)
     return futures, time.perf_counter() - t0, drained
+
+
+def run_closed_loop(
+    service: ClusteringService,
+    *,
+    duration_s: float,
+    sizes: tuple[int, ...],
+    seed: int = 0,
+    dim: int = 8,
+    pool: int = 32,
+    concurrency: int = 16,
+) -> float:
+    """Closed-loop saturation: ``concurrency`` workers submit→wait→resubmit.
+
+    Returns the completion rate in req/s.  A closed loop self-throttles,
+    which is exactly why this is the honest *capacity* probe: it cannot
+    offer more than the service completes, so its completion rate is the
+    sustainable throughput the overload sweep's multiples are scaled
+    from.  ``concurrency`` should be ≥ ``2 × max_batch`` so the batching
+    window always closes full and the engine pipeline never starves.
+    """
+    rng = np.random.default_rng(seed)
+    problems = [
+        synthetic_problem(rng, int(rng.choice(sizes)), dim)
+        for _ in range(pool)
+    ]
+    served = [0] * concurrency
+    stop = threading.Event()
+
+    def worker(k: int) -> None:
+        i = k
+        while not stop.is_set():
+            fut = service.submit(problems[i % pool], is_distance=True)
+            try:
+                fut.result(timeout=120)
+                served[k] += 1
+            except Exception:  # noqa: BLE001 — capacity probe counts successes
+                pass
+            i += concurrency
+
+    threads = [
+        threading.Thread(target=worker, args=(k,), daemon=True)
+        for k in range(concurrency)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    time.sleep(duration_s)
+    stop.set()
+    for t in threads:
+        t.join(timeout=120)
+    return sum(served) / (time.perf_counter() - t0)
+
+
+#: Overload-sweep traffic mix: (lane, fraction of arrivals).  Lane 0
+#: (highest priority) is the thin paid tier; lane 2 carries the bulk —
+#: so a 4× overload (which must shed ~75% of arrivals) is absorbable
+#: entirely by the lowest class, and "shedding stays confined to lane 2"
+#: is a meaningful gate rather than an arithmetic impossibility.  The
+#: high lanes must stay thin: at the sweep's top multiple M their joint
+#: demand is ``M × (f0 + f1) × capacity``, and once that approaches
+#: capacity they queue among themselves, lane 2 drains empty, and
+#: shed-oldest starts eating lane 1 — with 10% here, 4× keeps the
+#: high-priority demand at 0.4× capacity, comfortably inside it.
+OVERLOAD_LANE_MIX: tuple[tuple[int, float], ...] = (
+    (0, 0.02), (1, 0.08), (2, 0.90),
+)
+
+
+@dataclass(frozen=True)
+class OverloadPoint:
+    """One sweep point: open-loop load at ``multiple`` × capacity."""
+
+    multiple: float
+    offered_rps: float          # measured arrivals/s (not the nominal rate)
+    elapsed_s: float
+    n_submitted: int
+    n_ok: int
+    n_shed: int                 # typed ServiceOverloaded resolutions
+    n_expired: int              # typed DeadlineExceeded resolutions
+    n_failed: int               # anything else
+    shed_by_lane: tuple[int, ...]       # shed + expired, per lane
+    p50_admitted_ms: float
+    p99_admitted_ms: float      # latency percentiles of SERVED requests
+
+    @property
+    def goodput_rps(self) -> float:
+        return self.n_ok / self.elapsed_s if self.elapsed_s else 0.0
+
+    @property
+    def shed_rate(self) -> float:
+        total = self.n_submitted
+        return (self.n_shed + self.n_expired) / total if total else 0.0
+
+
+@dataclass(frozen=True)
+class OverloadReport:
+    """Capacity estimate + one :class:`OverloadPoint` per multiple."""
+
+    capacity_rps: float
+    points: tuple[OverloadPoint, ...]
+
+    def point(self, multiple: float) -> OverloadPoint:
+        for p in self.points:
+            if p.multiple == multiple:
+                return p
+        raise KeyError(f"no sweep point at {multiple}x")
+
+
+def overload_sweep(
+    config: ServiceConfig,
+    *,
+    multiples: tuple[float, ...] = (0.5, 1.0, 2.0, 4.0),
+    duration_s: float = 2.0,
+    capacity_s: float = 1.5,
+    sizes: tuple[int, ...] = (20, 27, 40, 56),
+    seed: int = 0,
+    dim: int = 8,
+    lane_mix: tuple[tuple[int, float], ...] = OVERLOAD_LANE_MIX,
+) -> OverloadReport:
+    """Measure capacity closed-loop, then drive 0.5×–4× of it open-loop.
+
+    Each multiple gets a *fresh warmed service* on ``config`` (one run's
+    backlog must not pollute the next point's tail), Poisson arrivals
+    with lanes drawn from ``lane_mix``, and per-request deadlines from
+    ``config.default_deadline_ms``.  Futures are classified by their
+    typed resolution — served / shed (:class:`ServiceOverloaded`) /
+    expired (:class:`DeadlineExceeded`) / failed — and the served-side
+    latency percentiles come from the service's own histogram, which
+    only ever observes successful resolutions: ``p99_admitted_ms`` is
+    p99-of-admitted by construction.
+    """
+    with ClusteringService(config) as probe:
+        probe.warmup()
+        capacity = run_closed_loop(
+            probe, duration_s=capacity_s, sizes=sizes, seed=seed, dim=dim,
+            concurrency=max(2 * config.max_batch, 8),
+        )
+    rng = np.random.default_rng(seed)
+    pool = 32
+    problems = [
+        synthetic_problem(rng, int(rng.choice(sizes)), dim)
+        for _ in range(pool)
+    ]
+    lanes_avail = np.array([lane for lane, _ in lane_mix])
+    lane_p = np.array([frac for _, frac in lane_mix], dtype=float)
+    lane_p /= lane_p.sum()
+    points: list[OverloadPoint] = []
+    for multiple in multiples:
+        rate_hz = capacity * multiple
+        with ClusteringService(config) as service:
+            service.warmup()
+            laned: list[tuple[int, Future]] = []
+            t0 = time.perf_counter()
+            deadline = t0 + duration_s
+            t_next = t0
+            while True:
+                now = time.perf_counter()
+                if now >= deadline:
+                    break
+                if now < t_next:
+                    time.sleep(min(t_next - now, 0.002))
+                    continue
+                lane = int(rng.choice(lanes_avail, p=lane_p))
+                laned.append((lane, service.submit(
+                    problems[len(laned) % pool],
+                    is_distance=True, priority=lane,
+                )))
+                t_next += rng.exponential(1.0 / rate_hz)
+            service.flush(timeout=120.0)
+            elapsed = time.perf_counter() - t0
+            snap = service.metrics.snapshot(service.cache)
+        n_ok = n_shed = n_expired = n_failed = 0
+        shed_by_lane = [0] * config.n_lanes
+        for lane, fut in laned:
+            exc = fut.exception() if fut.done() else None
+            if not fut.done() or exc is None:
+                n_ok += 1
+            elif isinstance(exc, ServiceOverloaded):
+                n_shed += 1
+                shed_by_lane[lane] += 1
+            elif isinstance(exc, DeadlineExceeded):
+                n_expired += 1
+                shed_by_lane[lane] += 1
+            else:
+                n_failed += 1
+        points.append(OverloadPoint(
+            multiple=multiple,
+            offered_rps=len(laned) / elapsed if elapsed else 0.0,
+            elapsed_s=elapsed,
+            n_submitted=len(laned),
+            n_ok=n_ok,
+            n_shed=n_shed,
+            n_expired=n_expired,
+            n_failed=n_failed,
+            shed_by_lane=tuple(shed_by_lane),
+            p50_admitted_ms=snap.p50_ms,
+            p99_admitted_ms=snap.p99_ms,
+        ))
+    return OverloadReport(capacity_rps=capacity, points=tuple(points))
+
+
+def print_overload_report(report: OverloadReport) -> None:
+    print(f"capacity={report.capacity_rps:.0f} req/s (closed-loop probe)")
+    print("  mult  offered   goodput  shed%   expired  p50ms  p99ms  "
+          "shed_by_lane")
+    for p in report.points:
+        print(
+            f"  {p.multiple:>4g}x {p.offered_rps:>7.0f} "
+            f"{p.goodput_rps:>9.0f} {p.shed_rate:>6.1%} {p.n_expired:>8d} "
+            f"{p.p50_admitted_ms:>6.2f} {p.p99_admitted_ms:>6.2f}  "
+            f"{list(p.shed_by_lane)}"
+        )
+
+
+def overload_config(
+    *,
+    max_queue: int = 32,
+    deadline_ms: float = 150.0,
+    bucket_ns: tuple[int, ...] = (32, 64),
+) -> ServiceConfig:
+    """The §14 reference overload posture: shed-oldest, 3 lanes, small
+    bounded queue, a deadline a few × the loaded p99.
+
+    The *small* ``max_queue`` is what bounds p99-of-admitted under deep
+    overload — an admitted request waits at most ``max_queue/capacity``
+    — and the deadline is the belt-and-braces cap behind it.  Used by
+    the CLI ``--overload`` mode and the CI-gated bench so both measure
+    the same posture.
+    """
+    return ServiceConfig(
+        method="complete",
+        engine="serial",
+        max_batch=8,
+        max_delay_ms=2.0,
+        bucket_ns=bucket_ns,
+        max_queue=max_queue,
+        overload_policy="shed-oldest",
+        n_lanes=3,
+        default_lane=2,
+        default_deadline_ms=deadline_ms,
+    )
 
 
 def drive(
@@ -212,7 +465,7 @@ def print_report(report: LoadReport) -> None:
     )
 
 
-def main(argv: list[str] | None = None) -> LoadReport:
+def main(argv: list[str] | None = None) -> "LoadReport | OverloadReport":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--rate", type=float, default=200.0, help="arrivals/sec")
     ap.add_argument("--duration", type=float, default=3.0, help="seconds")
@@ -245,7 +498,23 @@ def main(argv: list[str] | None = None) -> LoadReport:
                     help="seconds between periodic metrics dumps")
     ap.add_argument("--prometheus", action="store_true",
                     help="print the Prometheus text exposition at exit")
+    ap.add_argument("--overload", action="store_true",
+                    help="run the §14 overload sweep (closed-loop capacity "
+                         "probe, then open-loop at --multiples × capacity "
+                         "with priority lanes + deadlines) and exit")
+    ap.add_argument("--multiples", default="0.5,1,2,4",
+                    help="capacity multiples for --overload")
     args = ap.parse_args(argv)
+
+    if args.overload:
+        report = overload_sweep(
+            overload_config(),
+            multiples=tuple(float(m) for m in args.multiples.split(",")),
+            duration_s=args.duration,
+            seed=args.seed,
+        )
+        print_overload_report(report)
+        return report
 
     config = ServiceConfig(
         method=args.method,
