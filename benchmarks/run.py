@@ -9,6 +9,7 @@ Paper artifact → bench mapping:
   unified engine variant×early-stop    → bench_engine
   O(n²) nnchain engine + points mode   → bench_nnchain (EXPERIMENTS §Perf-5)
   sharded matrix-free chain + twophase → bench_distributed (EXPERIMENTS §Perf-7)
+  sub-quadratic landmark tier          → bench_landmark (EXPERIMENTS §Perf-10)
   kernel hot-spots                     → bench_kernels
   batched multi-problem engine         → bench_batch (EXPERIMENTS.md §Batch)
   online serving layer (DESIGN.md §10) → bench_service (EXPERIMENTS.md §Service)
@@ -142,6 +143,7 @@ def main() -> None:
         bench_distributed,
         bench_engine,
         bench_kernels,
+        bench_landmark,
         bench_linkage,
         bench_nnchain,
         bench_scaling,
@@ -176,6 +178,7 @@ def main() -> None:
             else (1, 2, 4, 8, 16)),
         "distributed": lambda: bench_distributed.main(
             smoke=smoke, paper=args.paper),
+        "landmark": lambda: bench_landmark.main(smoke=smoke),
         "roofline": roofline_report.main,
     }
     failed = []

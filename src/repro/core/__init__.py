@@ -14,8 +14,10 @@ from repro.core.batched import (
     bucket_signature,
     cluster_batch_merges,
 )
+from repro.core.distance import DistanceBudget, count_distance_queries
 from repro.core.engine import VARIANTS, plan_stages, resolve_compaction
 from repro.core.lance_williams import LWResult, lance_williams, lance_williams_from_points
+from repro.core.landmark import LandmarkResult, landmark_cluster
 from repro.core.linkage import METHODS, coefficients, default_metric, update_row
 from repro.core.nnchain import (
     POINTS_METHODS,
@@ -33,16 +35,20 @@ __all__ = [
     "BatchStats",
     "BucketSignature",
     "ClusterResult",
+    "DistanceBudget",
     "LWResult",
+    "LandmarkResult",
     "bucket_signature",
     "build_distance_matrix",
     "cluster",
     "cluster_batch",
     "cluster_batch_merges",
     "coefficients",
+    "count_distance_queries",
     "default_metric",
     "lance_williams",
     "lance_williams_from_points",
+    "landmark_cluster",
     "nn_chain",
     "nn_chain_from_points",
     "plan_stages",

@@ -42,7 +42,7 @@ from repro.core.nnchain import (
 )
 
 Backend = Literal["auto", "serial", "distributed", "kernel"]
-Algorithm = Literal["auto", "lw", "nnchain", "twophase"]
+Algorithm = Literal["auto", "lw", "nnchain", "twophase", "landmark"]
 
 
 @dataclass
@@ -218,6 +218,9 @@ def cluster(
     compaction: bool | str = "auto",
     matrix_free: bool | str = "auto",
     keep_inputs: bool = True,
+    n_landmarks: int | None = None,
+    seed: int = 0,
+    refine: int = 0,
 ) -> ClusterResult:
     """Hierarchically cluster *data* — THE reference for the engine knobs.
 
@@ -258,6 +261,19 @@ def cluster(
       *measured* (merge-set agreement, EXPERIMENTS.md §Perf-7), not
       assumed; reach for it only when the exact engines' per-step
       collectives are the bottleneck.
+    * ``"landmark"``: the **sub-quadratic** approximate tier
+      (:func:`repro.core.landmark.landmark_cluster`, DESIGN.md §15) —
+      ``k`` seeded landmarks (``n_landmarks`` / ``seed``; default
+      ``⌈√n·log₂ n⌉``) clustered exactly by the NN-chain engine, the
+      remaining ``n−k`` objects assigned through the streaming labeler,
+      optional ``refine`` centroid passes.  O(n·k + k²) distance
+      *evaluations* instead of Ω(n²) — the only tier that changes the
+      query complexity, not just its constant — with the quality delta
+      measured by the ``cut_label_agreement``/ARI gates
+      (EXPERIMENTS.md §Perf-10).  Points/conformations input with a
+      reducible method under an
+      :data:`repro.core.landmark.LANDMARK_METRICS` metric; serial
+      backend only.
     * ``"auto"`` (default): nnchain for large reducible problems on the
       serial path (``n ≥`` :data:`repro.core.nnchain.NNCHAIN_AUTO_MIN_N`
       with default ``variant``/``compaction``), LW otherwise — the
@@ -325,6 +341,12 @@ def cluster(
     no ``distances`` (``exemplars()`` would rebuild O(n²) on the host —
     it stays available, just not free).
 
+    **n_landmarks / seed / refine** (landmark only) — landmark count
+    (default ``⌈√n·log₂ n⌉``), sampling seed (same seed ⇒ bit-identical
+    run), and bounded centroid-refinement passes (Euclidean metrics).
+    An explicit ``n_landmarks``/``refine`` resolves ``algorithm="auto"``
+    to the landmark tier and contradicts any other explicit engine.
+
     **keep_inputs** — store the input points/distance matrix on the
     result (enables ``exemplars``/``centroids`` and the
     streaming-assignment export).  Pass ``False`` when accumulating many
@@ -351,8 +373,8 @@ def cluster(
         # matrix-free is an nnchain-family capability: an explicit request
         # makes "auto" mean nnchain, and an explicit "lw" is a
         # contradiction — never silently build the (n, n) matrix the
-        # caller opted out of.  An explicit nnchain/twophase already
-        # names a matrix-free-capable engine and stands.
+        # caller opted out of.  An explicit nnchain/twophase/landmark
+        # already names a matrix-free-capable engine and stands.
         if algorithm == "lw":
             raise ValueError(
                 "matrix_free=True requires the NN-chain engine, but "
@@ -362,13 +384,26 @@ def cluster(
         if algorithm == "auto":
             algorithm = "nnchain"
 
+    if n_landmarks is not None or refine != 0:
+        # the landmark knobs name the landmark tier, the same way
+        # matrix_free=True names the nnchain family: an explicit request
+        # makes "auto" mean landmark, any other explicit algorithm is a
+        # contradiction
+        if algorithm == "auto":
+            algorithm = "landmark"
+        elif algorithm != "landmark":
+            raise ValueError(
+                f"n_landmarks/refine belong to the landmark tier, but "
+                f"algorithm={algorithm!r} pins a different engine"
+            )
+
     if backend == "auto":
         # an explicit nnchain/twophase request owns the backend choice:
         # their default composition is the serial chain, so "auto" must
         # not hand them a multi-device mesh they did not ask for (the
         # sharded chain is explicit backend="distributed" opt-in)
         backend = (
-            "serial" if algorithm in ("nnchain", "twophase")
+            "serial" if algorithm in ("nnchain", "twophase", "landmark")
             else "distributed" if len(jax.devices()) > 1
             else "serial"
         )
@@ -377,6 +412,46 @@ def cluster(
         points is not None and points.ndim == 2
         and method in POINTS_METHODS and used_metric == "sqeuclidean"
     )
+
+    if algorithm == "landmark":
+        from repro.core.landmark import LANDMARK_METRICS, landmark_cluster
+
+        if points is None:
+            raise ValueError(
+                "algorithm='landmark' samples landmarks from coordinates "
+                "and assigns the rest through the streaming labeler: it "
+                "needs (n, d) points or (n, atoms, 3) conformations, not "
+                "a pre-built distance matrix (which already paid the "
+                "Ω(n²) evaluations this tier exists to avoid)"
+            )
+        if used_metric not in LANDMARK_METRICS:
+            raise ValueError(
+                f"algorithm='landmark' supports metrics {LANDMARK_METRICS} "
+                f"(the assignment labeler's), got {used_metric!r}"
+            )
+        if backend != "serial":
+            raise ValueError(
+                f"algorithm='landmark' is single-device (the whole point "
+                f"is that n·k work fits one host), got backend={backend!r}"
+            )
+        res = landmark_cluster(
+            points, method, metric=used_metric,
+            n_landmarks=n_landmarks, seed=seed, refine=refine,
+        )
+        # heights are already monotone-repaired + canonical: only truncate
+        merges = dg.truncate_canonical(
+            np.asarray(res.merges), n, stop_at_k, distance_threshold
+        )
+        return ClusterResult(
+            merges=merges,
+            method=method,
+            backend=backend,
+            algorithm="landmark",
+            n_leaves=n,
+            points=points if keep_inputs else None,
+            distances=None,
+            metric=used_metric,
+        )
 
     if algorithm == "twophase":
         if not points_capable:

@@ -260,6 +260,108 @@ def merge_set_agreement(
     return len(sa & sb) / denom if denom else 1.0
 
 
+def _contingency(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Dense ``(ka, kb)`` contingency table of two label vectors."""
+    a = np.asarray(a).ravel()
+    b = np.asarray(b).ravel()
+    if a.shape != b.shape:
+        raise ValueError(
+            f"label vectors must have equal length, got {a.shape} vs {b.shape}"
+        )
+    _, ai = np.unique(a, return_inverse=True)
+    _, bi = np.unique(b, return_inverse=True)
+    ka, kb = int(ai.max(initial=-1)) + 1, int(bi.max(initial=-1)) + 1
+    table = np.zeros((ka, kb), np.int64)
+    np.add.at(table, (ai, bi), 1)
+    return table
+
+
+def adjusted_rand_index(a: np.ndarray, b: np.ndarray) -> float:
+    """Adjusted Rand index between two flat labelings, in ``[-1, 1]``.
+
+    Pair-counting agreement corrected for chance: 1.0 iff the labelings
+    induce the same partition (invariant to label permutation), and
+    ≈ 0 in expectation for two *independent* random labelings — which
+    is exactly why the approximate-tier quality harness reports it
+    alongside :func:`label_agreement` (a high raw agreement on a
+    lopsided labeling can be chance; a high ARI cannot).  Pure numpy,
+    O(n + ka·kb).
+    """
+    table = _contingency(a, b)
+    n = table.sum()
+    if n < 2:
+        return 1.0
+
+    def comb2(x):
+        return x * (x - 1) / 2.0
+
+    sum_ij = comb2(table.astype(np.float64)).sum()
+    sum_a = comb2(table.sum(axis=1).astype(np.float64)).sum()
+    sum_b = comb2(table.sum(axis=0).astype(np.float64)).sum()
+    total = comb2(float(n))
+    expected = sum_a * sum_b / total
+    max_index = 0.5 * (sum_a + sum_b)
+    if max_index == expected:       # both labelings trivial (all one cluster
+        return 1.0                  # or all singletons): identical partitions
+    return float((sum_ij - expected) / (max_index - expected))
+
+
+def label_agreement(a: np.ndarray, b: np.ndarray) -> float:
+    """Fraction of items whose labels agree under a greedy cluster match.
+
+    Clusters of ``a`` are matched to clusters of ``b`` greedily by
+    descending overlap (each cluster used at most once — deterministic:
+    ties break on lowest cluster ids); the score is the matched overlap
+    mass over ``n``, in ``[0, 1]``.  Invariant to label permutation and
+    1.0 iff the partitions are identical.  This is the "did the
+    approximate tier put the points in the same clusters" number the
+    landmark gate asserts; report :func:`adjusted_rand_index` next to it
+    for the chance-corrected view.
+    """
+    table = _contingency(a, b)
+    n = table.sum()
+    if n == 0:
+        return 1.0
+    flat = [
+        (-int(table[i, j]), i, j)
+        for i in range(table.shape[0])
+        for j in range(table.shape[1])
+        if table[i, j] > 0
+    ]
+    flat.sort()
+    used_a: set[int] = set()
+    used_b: set[int] = set()
+    matched = 0
+    for neg, i, j in flat:
+        if i in used_a or j in used_b:
+            continue
+        used_a.add(i)
+        used_b.add(j)
+        matched += -neg
+    return matched / float(n)
+
+
+def cut_label_agreement(
+    merges_a: np.ndarray,
+    merges_b: np.ndarray,
+    k: int,
+    n: int | None = None,
+) -> float:
+    """:func:`label_agreement` between the ``k``-cuts of two dendrograms.
+
+    Cuts both merge lists at ``k`` clusters over the same ``n`` leaves
+    and scores the flat partitions.  This is the *measured* quality gate
+    of the approximate tiers (landmark, two-phase): the score against
+    the exact engine's dendrogram is reported in
+    ``benchmarks/bench_landmark.py`` / EXPERIMENTS.md §Perf-10 and
+    asserted ≥ its floor in CI — never assumed.  Complements
+    :func:`merge_set_agreement` (tree structure) with a
+    partition-at-the-cut view, which is what the serving path (labels,
+    exemplars, streaming assignment) actually exposes.
+    """
+    return label_agreement(cut(merges_a, k, n=n), cut(merges_b, k, n=n))
+
+
 def merge_heights(merges: np.ndarray) -> np.ndarray:
     return np.asarray(merges)[:, 2]
 

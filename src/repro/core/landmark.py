@@ -1,0 +1,342 @@
+"""Landmark tier — sub-quadratic *approximate* agglomeration (DESIGN.md §15).
+
+Every exact path in this repo evaluates Ω(n²) pairwise distances — the
+paper distributes that cost, it does not remove it.  Following the
+landmark/active schemes of *Efficient Clustering with Limited Distance
+Information* (arXiv 1408.2045, PAPERS.md), this tier spends only
+**O(n·k + k²)** distance evaluations for ``k ≪ n`` landmarks:
+
+1. **Sample** ``k`` landmarks (default ``⌈√n · log₂ n⌉``) by a seeded
+   deterministic permutation — same ``seed`` ⇒ bit-identical landmark
+   set, dendrogram and labels, on any host.
+2. **Cluster the landmarks exactly** with the NN-chain engine
+   (:mod:`repro.core.nnchain`): matrix-free points mode when the method
+   has a geometric summary (:data:`~repro.core.nnchain.POINTS_METHODS`
+   under squared-Euclidean), else a dense ``(k, k)`` matrix — the only
+   quadratic object anywhere, and it is quadratic in *k*, not *n*.
+3. **Assign** the remaining ``n − k`` objects to their nearest landmark
+   through the streaming one-pass labeler (:mod:`repro.service.assign`)
+   — one ``(n−k, k)`` pairwise call.
+4. Optionally **refine**: recompute each group's centroid and reassign
+   the non-landmark points against the centroids, ``refine`` times —
+   each pass costs one more ``(n−k, k)`` pairwise call, so the bound
+   only grows by a constant factor (Euclidean metrics only; centroids
+   are meaningless for rmsd/cosine input).
+
+The merge list is assembled in dependency order — per group, each
+member *attaches* to the group's running slot in ascending attach
+distance, then the landmark-level merges replay over the group slots —
+and handed to :func:`repro.core.dendrogram.canonical_order` with an
+unbounded repair budget (``rtol=1e30``), exactly the two-phase tier's
+stitching contract: attach heights and landmark-chain heights come from
+different recursions, so monotonicity is *repaired*, not assumed.
+
+**Approximation contract.**  No merge can separate two points assigned
+to the same landmark group, and the landmark chain sees each landmark
+as a unit-weight leaf regardless of how many points attach to it.  The
+quality delta versus the exact engine is therefore **measured, never
+assumed**: :func:`repro.core.dendrogram.cut_label_agreement` / ARI
+gates in ``tests/test_landmark.py`` and ``benchmarks/bench_landmark.py``
+(committed ``BENCH_landmark.json``), the same discipline the two-phase
+tier ships under.  Use this tier when the workload is
+well-separated-cluster dedup/labeling at a scale where Ω(n²) distance
+evaluations are unpayable; pin the exact engines when dendrogram fine
+structure below the group level matters.
+
+**Accounting.**  Every distance evaluation is recorded on any open
+:class:`repro.core.distance.DistanceBudget`: eager pairwise calls
+record themselves, and the landmark chain's compiled loop is accounted
+by its *measured* trip count (``ChainResult.iters × k``, tag
+``landmark_chain``) — tests assert the O(n·k + k²) claim from the
+budget, not from the algorithm description.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import numpy as np
+
+from repro.core import dendrogram as dg
+from repro.core.distance import kabsch_rmsd, record_queries
+from repro.core.linkage import default_metric
+from repro.core.nnchain import (
+    POINTS_METHODS,
+    REDUCIBLE_METHODS,
+    nn_chain,
+    nn_chain_from_points,
+)
+
+__all__ = [
+    "LANDMARK_METRICS",
+    "LandmarkResult",
+    "default_landmark_count",
+    "landmark_cluster",
+    "sample_landmarks",
+]
+
+#: Metrics the landmark tier serves — exactly the ones the assignment
+#: labeler can score a query against (:data:`repro.service.assign.ASSIGN_METRICS`).
+LANDMARK_METRICS: tuple[str, ...] = ("euclidean", "sqeuclidean", "cosine", "rmsd")
+
+#: Metrics whose group *centroid* is a meaningful representative — the
+#: refinement pass is restricted to these.
+_CENTROID_METRICS: tuple[str, ...] = ("euclidean", "sqeuclidean")
+
+
+class LandmarkResult(NamedTuple):
+    """Output of :func:`landmark_cluster` — an ``LWResult`` duck-type
+    (``merges``/``n_merges`` first) plus the tier's provenance.
+
+    ``merges`` is canonical (height-sorted, monotone-repaired) over all
+    ``n`` leaves; ``landmarks`` the sorted global indices of the sampled
+    landmarks; ``group_labels[p]`` the landmark-group each leaf landed
+    in (``0 … k−1``, landmark ``g`` is pinned to group ``g``) after the
+    final refinement pass.
+    """
+
+    merges: np.ndarray
+    n_merges: np.int32
+    landmarks: np.ndarray
+    group_labels: np.ndarray
+
+    @property
+    def k(self) -> int:
+        return int(self.landmarks.shape[0])
+
+
+def default_landmark_count(n: int) -> int:
+    """``⌈√n · log₂ n⌉`` clamped to ``[2, n]`` — the polylog oversampling
+    of the limited-distance-information schemes: enough landmarks that a
+    separated mixture's every component is hit w.h.p., few enough that
+    n·k stays sub-quadratic (n = 4096 ⇒ k = 768, 5.3× fewer queries;
+    the ratio keeps improving with n)."""
+    if n < 2:
+        return n
+    return max(2, min(n, int(math.ceil(math.sqrt(n) * math.log2(n)))))
+
+
+def sample_landmarks(n: int, k: int, seed: int) -> np.ndarray:
+    """``k`` distinct indices from ``range(n)``, sorted ascending.
+
+    A seeded PCG64 permutation prefix — deterministic across hosts and
+    runs for a given ``(n, k, seed)``, so a landmark run is
+    bit-reproducible end to end.  Sorted because the merge assembly maps
+    landmark-subproblem slots to global slots and the slot convention
+    (cluster slot = min leaf index) survives an *order-preserving*
+    index map unchanged.
+    """
+    if not 1 <= k <= n:
+        raise ValueError(f"need 1 <= k <= n, got k={k}, n={n}")
+    lm = np.random.default_rng(seed).permutation(n)[:k]
+    return np.sort(lm)
+
+
+def _attach_distances(Xr: np.ndarray, reps: np.ndarray, metric: str) -> np.ndarray:
+    """Per-point distance to its *chosen* representative — ``len(Xr)``
+    evaluations (one per point, tag ``attach``), used as the attach
+    merge heights.  ``reps`` is already gathered to ``Xr``'s order."""
+    if len(Xr) == 0:
+        return np.zeros((0,), np.float32)
+    record_queries(len(Xr), "attach")
+    if metric in ("euclidean", "sqeuclidean"):
+        sq = np.sum((Xr - reps) ** 2, axis=-1)
+        return np.sqrt(sq) if metric == "euclidean" else sq
+    if metric == "cosine":
+        num = np.sum(Xr * reps, axis=-1)
+        den = np.maximum(
+            np.linalg.norm(Xr, axis=-1) * np.linalg.norm(reps, axis=-1), 1e-12
+        )
+        return np.clip(1.0 - num / den, 0.0, 2.0).astype(np.float32)
+    # rmsd: optimal-superposition distance per (conformation, exemplar) pair
+    return np.asarray(jax.vmap(kabsch_rmsd)(Xr, reps), np.float32)
+
+
+def _assemble_merges(
+    n: int,
+    landmarks: np.ndarray,
+    rest: np.ndarray,
+    labels_rest: np.ndarray,
+    attach_d: np.ndarray,
+    lm_merges: np.ndarray,
+) -> np.ndarray:
+    """Stitch attach merges + mapped landmark merges into one canonical
+    slot-convention merge list over all ``n`` leaves.
+
+    Emission is dependency order (each group's attaches in ascending
+    height, then the landmark chain's canonical sequence over the group
+    slots), so the unbounded-budget monotone repair + stable height sort
+    of :func:`repro.core.dendrogram.canonical_order` is structurally
+    valid by construction — the two-phase stitching contract.
+    """
+    k = landmarks.shape[0]
+    slot_of = landmarks.astype(np.int64).copy()   # current global slot per group
+    gsize = np.ones(k, np.int64)                  # members absorbed so far
+    rows: list[tuple] = []
+
+    # attach merges — global ascending attach height (stable ⇒ per-group
+    # ascending too); the group's slot stays the min global index so far
+    for t in np.argsort(attach_d, kind="stable"):
+        g = int(labels_rest[t])
+        p = int(rest[t])
+        s = int(slot_of[g])
+        i, j = (s, p) if s < p else (p, s)
+        gsize[g] += 1
+        rows.append((i, j, float(attach_d[t]), float(gsize[g])))
+        slot_of[g] = i
+
+    # landmark-level merges — lm_merges is canonical over landmark
+    # subindices 0…k−1; landmarks are sorted ascending, so the
+    # subindex→group identification is order-preserving and the i<j slot
+    # convention survives the map (group slots are min member indices)
+    for li, lj, h, _ in np.asarray(lm_merges, np.float64):
+        gi, gj = int(li), int(lj)
+        si, sj = int(slot_of[gi]), int(slot_of[gj])
+        i, j = (si, sj) if si < sj else (sj, si)
+        gsize[gi] += gsize[gj]
+        rows.append((i, j, float(h), float(gsize[gi])))
+        slot_of[gi] = i
+
+    merges = np.asarray(rows, np.float32).reshape(-1, 4)
+    return dg.canonical_order(merges, n=n, rtol=1e30)
+
+
+def landmark_cluster(
+    X,
+    method: str = "ward",
+    *,
+    metric: str | None = None,
+    n_landmarks: int | None = None,
+    seed: int = 0,
+    refine: int = 0,
+) -> LandmarkResult:
+    """Sub-quadratic approximate agglomeration of ``n`` objects.
+
+    ``X`` is ``(n, d)`` points (or ``(n, atoms, 3)`` conformations with
+    ``metric="rmsd"``); ``method`` any reducible linkage
+    (:data:`~repro.core.nnchain.REDUCIBLE_METHODS` — the landmarks are
+    clustered by the NN-chain engine); ``metric`` one of
+    :data:`LANDMARK_METRICS` (default: scipy's per-method convention).
+    ``n_landmarks`` overrides :func:`default_landmark_count`; ``seed``
+    pins the sample; ``refine ≥ 1`` adds bounded centroid-reassignment
+    passes (Euclidean metrics only).
+
+    Total distance evaluations: ``(1 + refine)·(n−k)·k`` assignment +
+    ``n−k`` attach heights + the landmark chain (``iters·k ≤ (4k+8)·k``
+    matrix-free, or an eager ``k²`` matrix build) — O(n·k + k²), every
+    term recorded on any open
+    :class:`~repro.core.distance.DistanceBudget`.  The ``(n, n)`` matrix
+    is never formed; ``benchmarks/bench_landmark.py`` asserts its
+    absence from the compiled HLO.
+    """
+    if method not in REDUCIBLE_METHODS:
+        raise ValueError(
+            f"landmark tier clusters its landmarks with the NN-chain "
+            f"engine, which needs a reducible method {REDUCIBLE_METHODS}; "
+            f"got {method!r}"
+        )
+    metric = metric or default_metric(method)
+    if metric not in LANDMARK_METRICS:
+        raise ValueError(
+            f"landmark tier assigns through the streaming labeler, which "
+            f"scores {LANDMARK_METRICS}; got metric={metric!r}"
+        )
+    X = np.asarray(X, np.float32)
+    if metric == "rmsd":
+        if X.ndim != 3 or X.shape[-1] != 3:
+            raise ValueError(
+                f"metric='rmsd' expects (n, atoms, 3) conformations, got {X.shape}"
+            )
+    elif X.ndim != 2:
+        raise ValueError(f"expected (n, d) points, got {X.shape}")
+    if refine < 0:
+        raise ValueError(f"refine must be >= 0, got {refine}")
+    if refine and metric not in _CENTROID_METRICS:
+        raise ValueError(
+            f"the refinement pass reassigns against group centroids, which "
+            f"only exist for {_CENTROID_METRICS}; got metric={metric!r} "
+            "(use refine=0)"
+        )
+    n = int(X.shape[0])
+    if n < 2:
+        return LandmarkResult(
+            merges=np.zeros((0, 4), np.float32),
+            n_merges=np.int32(0),
+            landmarks=np.arange(n, dtype=np.int64),
+            group_labels=np.zeros(n, np.int64),
+        )
+    k = default_landmark_count(n) if n_landmarks is None else int(n_landmarks)
+    landmarks = sample_landmarks(n, k, seed)
+    Xl = X[landmarks]
+
+    # --- exact landmark clustering -------------------------------------
+    points_capable = X.ndim == 2 and method in POINTS_METHODS and metric == "sqeuclidean"
+    if k < 2:
+        lm_canonical = np.zeros((0, 4), np.float32)
+    elif points_capable:
+        res = nn_chain_from_points(Xl, method)
+        # the chain's row builds run inside the compiled loop — account
+        # them by the measured trip count (module docstring)
+        record_queries(int(res.iters) * k, "landmark_chain")
+        if int(res.n_merges) != k - 1:
+            raise RuntimeError(
+                "landmark chain hit its iteration cap before finishing — "
+                "the input likely contains NaNs"
+            )
+        lm_canonical = dg.canonical_order(np.asarray(res.merges), n=k)
+    else:
+        from repro.core.api import build_distance_matrix
+        from repro.core.distance import pairwise_cosine
+
+        # k² queries, recorded eagerly (build_distance_matrix covers the
+        # matrix-backed metrics; cosine is assignment-only elsewhere)
+        Dl = (pairwise_cosine(Xl) if metric == "cosine"
+              else build_distance_matrix(Xl, metric))
+        res = nn_chain(Dl, method)
+        if int(res.n_merges) != k - 1:
+            raise RuntimeError(
+                "landmark chain hit its iteration cap before finishing — "
+                "the input likely contains NaNs"
+            )
+        lm_canonical = dg.canonical_order(np.asarray(res.merges), n=k)
+
+    # --- one-pass assignment (+ optional centroid refinement) ----------
+    from repro.service.assign import AssignIndex, assign
+
+    mask = np.ones(n, bool)
+    mask[landmarks] = False
+    rest = np.flatnonzero(mask)
+    Xr = X[rest]
+    reps = np.asarray(Xl, np.float32)
+    if len(rest):
+        labels_rest = assign(
+            AssignIndex(reps=reps, metric=metric, kind="landmark"), Xr
+        )
+        for _ in range(refine):
+            # group centroid = mean of the landmark and its members; a
+            # landmark stays pinned to its own group, so none goes empty
+            sums = reps.copy()
+            counts = np.ones(k, np.float32)
+            np.add.at(sums, labels_rest, Xr)
+            np.add.at(counts, labels_rest, 1.0)
+            reps = sums / counts[:, None]
+            labels_rest = assign(
+                AssignIndex(reps=reps, metric=metric, kind="centroid"), Xr
+            )
+    else:
+        labels_rest = np.zeros((0,), np.int64)
+
+    attach_d = _attach_distances(Xr, reps[labels_rest], metric)
+    merges = _assemble_merges(n, landmarks, rest, labels_rest, attach_d, lm_canonical)
+
+    group_labels = np.empty(n, np.int64)
+    group_labels[landmarks] = np.arange(k)
+    group_labels[rest] = labels_rest
+    return LandmarkResult(
+        merges=merges,
+        n_merges=np.int32(merges.shape[0]),
+        landmarks=landmarks.astype(np.int64),
+        group_labels=group_labels,
+    )

@@ -91,6 +91,7 @@ __all__ = [
     "POINTS_METHODS",
     "NNCHAIN_AUTO_MIN_N",
     "NNCHAIN_BATCH_AUTO_MIN_N",
+    "ChainResult",
     "nn_chain",
     "nn_chain_from_points",
     "nn_chain_from_summaries",
@@ -145,6 +146,27 @@ MATRIX_FREE_AUTO_MIN_N = 4096
 
 _F32 = jnp.float32
 _INF = jnp.float32(jnp.inf)
+
+
+class ChainResult(NamedTuple):
+    """:class:`~repro.core.engine.LWResult` plus the measured loop-trip
+    count.
+
+    Duck-types ``LWResult`` (``merges``/``n_merges`` first, the
+    ``DistributedChainResult`` convention) and adds ``iters`` — how many
+    chain-loop trips the run actually executed.  Each trip performs
+    exactly ONE candidate-row build (O(n) distances dense, O(n·d) work
+    points mode), so ``iters × row_length`` is the *measured* number of
+    distance evaluations inside the compiled loop — the number the
+    landmark tier's :class:`~repro.core.distance.DistanceBudget`
+    records, since host-side hooks cannot see inside a ``while_loop``
+    (DESIGN.md §15).  A clean run satisfies ``iters ≤ 2(n−1)`` pushes +
+    merges; the static cap is ``4n + 8``.
+    """
+
+    merges: jax.Array
+    n_merges: jax.Array
+    iters: jax.Array
 
 
 # ---------------------------------------------------------------------------
@@ -533,16 +555,17 @@ def _dense_nnchain_ops(method: str, n: int) -> NNChainOps:
 
 
 @partial(jax.jit, static_argnames=("method",))
-def _run_dense(D: jax.Array, *, method: str) -> LWResult:
+def _run_dense(D: jax.Array, *, method: str) -> ChainResult:
     D = symmetrize(D)
     n = D.shape[0]
     rep = (D, jnp.zeros((n,), jnp.int32))
     state = _init_state(rep, jnp.ones((n,), bool), n - 1)
     out = _chain_loop(_dense_nnchain_ops(method, n), state, n - 1)
-    return LWResult(merges=out.merges, n_merges=out.n_merges)
+    return ChainResult(merges=out.merges, n_merges=out.n_merges,
+                       iters=out.iters)
 
 
-def nn_chain(D: jax.Array, method: str = "complete") -> LWResult:
+def nn_chain(D: jax.Array, method: str = "complete") -> ChainResult:
     """Full agglomeration of an ``(n, n)`` distance matrix via NN-chain.
 
     O(n²) total work, exact for the reducible methods.  Merges are in
@@ -562,8 +585,9 @@ def nn_chain(D: jax.Array, method: str = "complete") -> LWResult:
     if D.ndim != 2 or D.shape[0] != D.shape[1]:
         raise ValueError(f"distance matrix must be square, got {D.shape}")
     if D.shape[0] < 2:
-        return LWResult(merges=jnp.zeros((0, 4), _F32),
-                        n_merges=jnp.zeros((), jnp.int32))
+        return ChainResult(merges=jnp.zeros((0, 4), _F32),
+                           n_merges=jnp.zeros((), jnp.int32),
+                           iters=jnp.zeros((), jnp.int32))
     return _run_dense(D, method=method)
 
 
@@ -656,7 +680,7 @@ def _run_points(
     use_pallas: bool,
     block_n: int,
     interpret: bool,
-) -> LWResult:
+) -> ChainResult:
     n = X.shape[0]
     rep = (jnp.asarray(X, _F32), jnp.zeros((n,), _F32))
     state = _init_state(rep, alive, n_steps)
@@ -664,7 +688,8 @@ def _run_points(
         method, n, use_pallas=use_pallas, block_n=block_n, interpret=interpret
     )
     out = _chain_loop(ops, state, n_steps)
-    return LWResult(merges=out.merges, n_merges=out.n_merges)
+    return ChainResult(merges=out.merges, n_merges=out.n_merges,
+                       iters=out.iters)
 
 
 def nn_chain_from_points(
@@ -674,7 +699,7 @@ def nn_chain_from_points(
     use_pallas: bool = False,
     block_n: int = 512,
     interpret: bool | None = None,
-) -> LWResult:
+) -> ChainResult:
     """Matrix-free full agglomeration of ``(n, d)`` points — O(n·d + n)
     peak memory, the ``(n, n)`` matrix is **never** allocated.
 
@@ -702,8 +727,9 @@ def nn_chain_from_points(
         raise ValueError(f"expected (n, d) points, got {X.shape}")
     n = int(X.shape[0])
     if n < 2:
-        return LWResult(merges=jnp.zeros((0, 4), _F32),
-                        n_merges=jnp.zeros((), jnp.int32))
+        return ChainResult(merges=jnp.zeros((0, 4), _F32),
+                           n_merges=jnp.zeros((), jnp.int32),
+                           iters=jnp.zeros((), jnp.int32))
     if use_pallas:
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
@@ -727,7 +753,7 @@ def _run_summaries(
     *,
     method: str,
     n_steps: int,
-) -> LWResult:
+) -> ChainResult:
     n = W.shape[0]
     state = _init_state(
         (W, u), jnp.ones((n,), bool), n_steps, sizes=sizes
@@ -736,7 +762,8 @@ def _run_summaries(
         method, n, use_pallas=False, block_n=512, interpret=False
     )
     out = _chain_loop(ops, state, n_steps)
-    return LWResult(merges=out.merges, n_merges=out.n_merges)
+    return ChainResult(merges=out.merges, n_merges=out.n_merges,
+                       iters=out.iters)
 
 
 def nn_chain_from_summaries(
@@ -744,7 +771,7 @@ def nn_chain_from_summaries(
     u: jax.Array,
     sizes: jax.Array,
     method: str = "ward",
-) -> LWResult:
+) -> ChainResult:
     """Agglomerate ``k`` pre-accumulated geometric summaries.
 
     Each slot is a whole *cluster* — ``W[k]`` its summary point
@@ -775,8 +802,9 @@ def nn_chain_from_summaries(
             f"{u.shape} and {sizes.shape}"
         )
     if k < 2:
-        return LWResult(merges=jnp.zeros((0, 4), _F32),
-                        n_merges=jnp.zeros((), jnp.int32))
+        return ChainResult(merges=jnp.zeros((0, 4), _F32),
+                           n_merges=jnp.zeros((), jnp.int32),
+                           iters=jnp.zeros((), jnp.int32))
     return _run_summaries(W, u, sizes, method=method, n_steps=k - 1)
 
 

@@ -36,12 +36,25 @@ def token_batch(seed: int, step: int, batch: int, seq_len: int,
 
 
 def gaussian_mixture(seed: int, n: int, dim: int, k: int = 8,
-                     spread: float = 6.0) -> tuple[np.ndarray, np.ndarray]:
-    """Clusterable embeddings: (points (n, dim), true labels (n,))."""
+                     spread: float = 6.0, *, return_labels: bool = True):
+    """Clusterable embeddings: (points (n, dim), true labels (n,)).
+
+    Pure function of ``seed`` — the same seed returns bit-identical
+    points *and* labels (the quality harness diffs approximate tiers
+    against ground truth, so determinism is load-bearing and tested).
+    ``return_labels=False`` returns just the points; the draw is
+    identical either way, so the two forms describe one dataset.
+    """
+    if not 1 <= k <= n:
+        raise ValueError(
+            f"gaussian_mixture needs 1 <= k <= n components, got k={k}, n={n}"
+        )
     rng = np.random.default_rng(seed)
     centers = rng.normal(scale=spread, size=(k, dim))
     labels = rng.integers(0, k, size=n)
     pts = centers[labels] + rng.normal(size=(n, dim))
+    if not return_labels:
+        return pts.astype(np.float32)
     return pts.astype(np.float32), labels
 
 

@@ -94,7 +94,16 @@ def row_sq_euclidean(
     contract).  Keeping the arithmetic in one place keeps the serial and
     sharded engines' distances bit-identical — the equivalence tests
     rely on it.
+
+    Eager calls record ``m`` evaluations on any open
+    :class:`~repro.core.distance.DistanceBudget`; a call under tracing
+    is accounted by its engine's measured trip count instead
+    (``ChainResult.iters`` — see the distance module docstring).
     """
+    from repro.core.distance import _concrete, record_queries
+
+    if _concrete(x, Y):
+        record_queries(Y.shape[0], "row")
     if use_pallas:
         return row_sq_euclidean_pallas(
             x, Y, block_n=block_n, interpret=interpret

@@ -78,7 +78,13 @@ from repro.core.batched import (
 )
 from repro.core.engine import VARIANTS
 from repro.core.linkage import METHODS
-from repro.core.nnchain import POINTS_METHODS, resolve_batch_algorithm
+from repro.core.distance import _budget_stack, count_distance_queries
+from repro.core.landmark import LANDMARK_METRICS, landmark_cluster
+from repro.core.nnchain import (
+    POINTS_METHODS,
+    REDUCIBLE_METHODS,
+    resolve_batch_algorithm,
+)
 from repro.distributed.fault import RetryPolicy, retry_call
 from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
 from repro.service.admission import OVERLOAD_POLICIES, AdmissionQueue
@@ -115,8 +121,18 @@ class ServiceConfig:
     # it (repro.core.nnchain.resolve_batch_algorithm): "auto" keeps dense
     # buckets on LW and routes matrix-free points buckets of
     # NNCHAIN_BATCH_AUTO_MIN_N or larger to the batched NN-chain engine;
-    # "nnchain" forces the chain (reducible methods, serial engine only)
+    # "nnchain" forces the chain (reducible methods, serial engine only);
+    # "landmark" routes EVERY request to the sub-quadratic landmark lane
+    # (repro.core.landmark, DESIGN.md §15) — per-request execution on the
+    # supervised worker, no shape bucket, no AOT cache entry, no bucket-
+    # grid size cap: the lane for large single requests whose Ω(n²)
+    # distance evaluations the exact engines cannot afford
     algorithm: str = "auto"
+    # landmark-lane knobs (algorithm="landmark" only): landmark count
+    # override (None = ⌈√n·log₂ n⌉), sampling seed, refinement passes
+    n_landmarks: int | None = None
+    landmark_seed: int = 0
+    landmark_refine: int = 0
     # declared embedding dim of the steady-state *points* traffic, so
     # warmup() also precompiles the matrix-free (B, n, d) executables;
     # None: warm dense signatures only (points requests of another d are
@@ -175,10 +191,39 @@ class ServiceConfig:
                 bucket_n=BUCKETS[0], variant=self.variant,
                 compaction=self.compaction,
             )
+        elif self.algorithm == "landmark":
+            if self.method not in REDUCIBLE_METHODS:
+                raise ValueError(
+                    f"algorithm='landmark' clusters its landmarks with the "
+                    f"NN-chain engine, which needs a reducible method "
+                    f"{REDUCIBLE_METHODS}; got {self.method!r}"
+                )
+            if self.engine != "serial":
+                raise ValueError(
+                    f"algorithm='landmark' runs per-request on the "
+                    f"supervised worker (engine='serial'), got "
+                    f"{self.engine!r}"
+                )
         elif self.algorithm not in ("auto", "lw"):
             raise ValueError(
-                f"algorithm must be 'auto', 'lw' or 'nnchain', got "
-                f"{self.algorithm!r}"
+                f"algorithm must be 'auto', 'lw', 'nnchain' or 'landmark', "
+                f"got {self.algorithm!r}"
+            )
+        if self.n_landmarks is not None and self.n_landmarks < 1:
+            raise ValueError(
+                f"n_landmarks must be >= 1 or None, got {self.n_landmarks}"
+            )
+        if self.landmark_refine < 0:
+            raise ValueError(
+                f"landmark_refine must be >= 0, got {self.landmark_refine}"
+            )
+        if (
+            self.algorithm != "landmark"
+            and (self.n_landmarks is not None or self.landmark_refine != 0)
+        ):
+            raise ValueError(
+                "n_landmarks/landmark_refine belong to the landmark lane — "
+                f"set algorithm='landmark' (got {self.algorithm!r})"
             )
         if self.points_dim is not None and self.points_dim < 1:
             raise ValueError(
@@ -457,6 +502,12 @@ class _Job:
     lane: int = 0               # priority lane (0 = highest)
     tenant: str | None = None   # quota bucket
     deadline: float | None = None   # absolute perf_counter deadline
+    landmark: bool = False      # route to the sub-quadratic landmark lane
+    # DistanceBudget scopes open on the SUBMITTING thread — the landmark
+    # lane replays its worker-side query tally onto these, so a caller's
+    # count_distance_queries() sees service traffic too (budgets are
+    # thread-local, the worker's own stack is empty)
+    budgets: list = field(default_factory=list, repr=False)
 
 
 class ClusteringService:
@@ -543,6 +594,8 @@ class ClusteringService:
         compiles on its first nnchain bucket.
         """
         cfg = self.config
+        if cfg.algorithm == "landmark":
+            return 0    # per-request lane: nothing to precompile AOT
         kw = dict(
             method=cfg.method,
             engine=cfg.engine,
@@ -647,29 +700,48 @@ class ClusteringService:
             n = int((D if points is None else points).shape[0])
             if n < 2:
                 raise ValueError(f"need at least 2 items to cluster, got {n}")
-            bn = bucket_n(n)            # raises if larger than the top bucket
-            # matrix-free routing: same capability rule and per-bucket
-            # resolution as cluster_batch — a capable request whose
-            # bucket resolves to nnchain never builds its (n, n) matrix
-            capable = (
-                points is not None and points.ndim == 2
-                and cfg.method in POINTS_METHODS
-                and used_metric == "sqeuclidean"
-            )
-            algo = resolve_batch_algorithm(
-                cfg.algorithm, method=cfg.method, engine=cfg.engine,
-                bucket_n=bn, variant=cfg.variant, compaction=cfg.compaction,
-                points_capable=capable,
-            )
-            if algo == "nnchain" and capable:
+            landmark = cfg.algorithm == "landmark"
+            if landmark:
+                # the sub-quadratic lane: per-request execution, no shape
+                # bucket and no bucket-grid size cap — the (n, n) matrix
+                # is never built anywhere
+                if points is None:
+                    raise ValueError(
+                        "algorithm='landmark' samples landmarks from "
+                        "coordinates: submit points/conformations, not a "
+                        "pre-built distance matrix"
+                    )
+                if used_metric not in LANDMARK_METRICS:
+                    raise ValueError(
+                        f"algorithm='landmark' supports metrics "
+                        f"{LANDMARK_METRICS}, got {used_metric!r}"
+                    )
                 mat = None
                 points = np.asarray(points, np.float32)
             else:
-                mat = np.asarray(
-                    D if points is None
-                    else build_distance_matrix(points, used_metric),
-                    np.float32,
+                bn = bucket_n(n)        # raises if larger than the top bucket
+                # matrix-free routing: same capability rule and per-bucket
+                # resolution as cluster_batch — a capable request whose
+                # bucket resolves to nnchain never builds its (n, n) matrix
+                capable = (
+                    points is not None and points.ndim == 2
+                    and cfg.method in POINTS_METHODS
+                    and used_metric == "sqeuclidean"
                 )
+                algo = resolve_batch_algorithm(
+                    cfg.algorithm, method=cfg.method, engine=cfg.engine,
+                    bucket_n=bn, variant=cfg.variant,
+                    compaction=cfg.compaction, points_capable=capable,
+                )
+                if algo == "nnchain" and capable:
+                    mat = None
+                    points = np.asarray(points, np.float32)
+                else:
+                    mat = np.asarray(
+                        D if points is None
+                        else build_distance_matrix(points, used_metric),
+                        np.float32,
+                    )
         except Exception as exc:  # noqa: BLE001 — resolve, don't raise
             self.metrics.observe_failure()
             self.tracer.add_span(
@@ -689,6 +761,8 @@ class ClusteringService:
             deadline=(
                 None if deadline_ms is None else t_sub1 + deadline_ms / 1e3
             ),
+            landmark=landmark,
+            budgets=list(_budget_stack()) if landmark else [],
         )
         with self._cond:
             self._pending += 1
@@ -778,9 +852,14 @@ class ClusteringService:
 
     def _dispatch(self, jobs: list[_Job]) -> None:
         # (bucket_n, matrix-free dim or 0): LW and nnchain buckets may
-        # coexist in one window — distinct keys, distinct signatures
+        # coexist in one window — distinct keys, distinct signatures.
+        # Landmark jobs group under the (-1, dim) sentinel: no shape
+        # bucket, executed per-request by _run_landmark.
         groups: dict[tuple[int, int], list[_Job]] = {}
         for job in self._reap_expired(jobs):
+            if job.landmark:
+                groups.setdefault((-1, job.points.shape[1]), []).append(job)
+                continue
             pdim = job.points.shape[1] if job.matrix is None else 0
             groups.setdefault((bucket_n(job.n), pdim), []).append(job)
         for key in sorted(groups):
@@ -792,10 +871,83 @@ class ClusteringService:
             if not group:
                 continue
             try:
-                self._run_bucket(key, group)
+                if key[0] == -1:
+                    self._run_landmark(group)
+                else:
+                    self._run_bucket(key, group)
             except Exception as exc:  # noqa: BLE001 — fail the bucket's futures
                 for job in group:
                     self._finish(job, error=exc)
+
+    def _run_landmark(self, group: list[_Job]) -> None:
+        """The sub-quadratic lane (DESIGN.md §15): each job is ONE
+        supervised :func:`repro.core.landmark.landmark_cluster` call.
+
+        No shape bucket, no packing, no AOT cache entry — a landmark
+        request is a large single problem whose batching win would be
+        nil and whose (n, n) padding cost would be the exact waste this
+        tier exists to avoid.  Watchdog + bounded retry still apply, so
+        a wedged or transiently failing run fails only its own request.
+        Worker-side distance queries are replayed onto any budget scopes
+        the submitter had open (``_Job.budgets``) — budgets are
+        thread-local, so the worker's own stack never sees them.
+        """
+        cfg = self.config
+        tracer = self.tracer
+        for job in group:
+            t0 = time.perf_counter()
+
+            def execute(job: _Job = job):
+                if self._execute_hook is not None:
+                    self._execute_hook(f"landmark/{job.n}")
+                with count_distance_queries() as spent:
+                    res = landmark_cluster(
+                        job.points, cfg.method, metric=job.metric,
+                        n_landmarks=cfg.n_landmarks,
+                        seed=cfg.landmark_seed,
+                        refine=cfg.landmark_refine,
+                    )
+                for budget in job.budgets:
+                    for tag, v in spent.by_tag.items():
+                        budget.record(v, tag)
+                return res, time.perf_counter()
+
+            try:
+                res, t_done = retry_call(
+                    lambda execute=execute: self._watchdog.run(execute),
+                    self._retry_policy,
+                    retry_if=is_transient,
+                    on_retry=lambda attempt, exc: self.metrics.observe_retry(),
+                )
+            except Exception as exc:  # noqa: BLE001 — fail only this job
+                self._finish(job, error=exc)
+                tracer.add_span(
+                    "landmark", t0, time.perf_counter(),
+                    trace_id=job.trace_id, error=type(exc).__name__,
+                )
+                continue
+            self.metrics.observe_bucket(
+                cells_real=int(job.n * res.k), cells_padded=int(job.n * res.k)
+            )
+            m = dg.truncate_canonical(
+                np.asarray(res.merges), job.n,
+                cfg.stop_at_k, cfg.distance_threshold,
+            )
+            result = ClusterResult(
+                merges=m,
+                method=cfg.method,
+                backend=cfg.engine,
+                algorithm="landmark",
+                n_leaves=job.n,
+                points=job.points,
+                distances=None,
+                metric=job.metric,
+            )
+            self._finish(job, result=result, t_done=t_done)
+            tracer.add_span(
+                "landmark", t0, time.perf_counter(),
+                trace_id=job.trace_id, n=job.n, k=res.k,
+            )
 
     def _run_bucket(self, key: tuple[int, int], group: list[_Job]) -> None:
         cfg = self.config

@@ -305,6 +305,7 @@ def test_compaction_early_stop_matrix(rng):
         assert not m[nm:].any(), "rows past n_merges must stay zero"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("variant", ("baseline", "lazy"))
 def test_batched_compaction_ragged_bucket(variant, rng):
     """One ragged bucket (lockstep lanes, exhausted lanes compact their

@@ -1,0 +1,290 @@
+"""Landmark sub-quadratic tier (DESIGN.md §15): measured, never assumed.
+
+Three layers, mirroring the tier's design:
+
+* **query accounting** — the O(n·k + k²) claim is asserted from a
+  :class:`~repro.core.distance.DistanceBudget` tally of *actual*
+  distance evaluations, and strict sub-quadraticity (< n²) with it;
+* **quality gates** — ``cut_label_agreement`` / ARI against the exact
+  NN-chain engine on separated mixtures (the n = 4096 acceptance gate
+  is the ``slow``-marked test);
+* **plumbing** — determinism, exactness at k = n, the ``cluster`` API
+  wiring, the service landmark lane, and the validation surface.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cluster, count_distance_queries
+from repro.core import dendrogram as dg
+from repro.core.distance import pairwise_sq_euclidean
+from repro.core.landmark import (
+    default_landmark_count,
+    landmark_cluster,
+    sample_landmarks,
+)
+from repro.core.nnchain import nn_chain_from_points
+from repro.data.synthetic import conformations, gaussian_mixture
+
+
+def _mixture(seed=0, n=512, dim=8, k=6, spread=10.0):
+    return gaussian_mixture(seed=seed, n=n, dim=dim, k=k, spread=spread)
+
+
+# ---------------------------------------------------------------------------
+# query accounting
+# ---------------------------------------------------------------------------
+
+
+def test_query_budget_subquadratic():
+    n = 1024
+    pts, _ = _mixture(seed=1, n=n)
+    k = default_landmark_count(n)
+    with count_distance_queries() as budget:
+        res = landmark_cluster(pts, "ward", metric="sqeuclidean", seed=0)
+    # the sub-quadratic claim, asserted from measured evaluations: the
+    # budget stays within a small constant of n·k + k² AND strictly
+    # below the n² every dense path pays
+    assert budget.queries <= 3 * (n * k + k * k), budget
+    assert budget.queries < n * n, budget
+    # the only eager pairwise call is the (n-k, k) assignment — its exact
+    # size proves no (n, n) matrix was ever built eagerly
+    assert budget.by_tag["sq_euclidean"] == (n - k) * k, budget
+    # the compiled chain loop is accounted by measured trips x row length
+    assert budget.by_tag["landmark_chain"] % k == 0
+    assert budget.by_tag["landmark_chain"] <= (4 * k + 8) * k
+    assert res.n_merges == n - 1
+
+
+def test_refine_adds_bounded_passes():
+    n = 512
+    pts, _ = _mixture(seed=2, n=n)
+    k = 64
+    with count_distance_queries() as b0:
+        landmark_cluster(pts, "ward", metric="sqeuclidean",
+                         n_landmarks=k, seed=0, refine=0)
+    with count_distance_queries() as b2:
+        landmark_cluster(pts, "ward", metric="sqeuclidean",
+                         n_landmarks=k, seed=0, refine=2)
+    # each refinement pass is exactly one more (n-k, k) assignment call
+    assert b2.by_tag["sq_euclidean"] - b0.by_tag["sq_euclidean"] == 2 * (n - k) * k
+
+
+def test_assignment_hlo_free_of_nn_buffers():
+    """The landmark pipeline's one big compiled pairwise is (n-k, k) —
+    its HLO must never allocate an (n, n) buffer."""
+    n, d = 2048, 16
+    k = default_landmark_count(n)
+    lowered = jax.jit(pairwise_sq_euclidean).lower(
+        jax.ShapeDtypeStruct((n - k, d), jnp.float32),
+        jax.ShapeDtypeStruct((k, d), jnp.float32),
+    )
+    text = lowered.compile().as_text()
+    assert f"[{n},{n}]" not in text.replace(" ", "")
+
+
+# ---------------------------------------------------------------------------
+# quality gates
+# ---------------------------------------------------------------------------
+
+
+def test_quality_gate_fast():
+    n, k_true = 512, 6
+    pts, truth = _mixture(seed=3, n=n, k=k_true)
+    res = landmark_cluster(pts, "ward", metric="sqeuclidean", seed=0)
+    exact = dg.canonical_order(
+        np.asarray(nn_chain_from_points(pts, "ward").merges), n=n
+    )
+    assert dg.cut_label_agreement(res.merges, exact, k_true, n=n) >= 0.95
+    assert dg.adjusted_rand_index(dg.cut(res.merges, k_true, n=n), truth) >= 0.95
+
+
+@pytest.mark.slow
+def test_quality_gate_n4096():
+    """The acceptance gate: n = 4096, separation >= 8 — cut agreement
+    vs the exact engine >= 0.95, merge-set agreement reported."""
+    n, k_true = 4096, 8
+    pts, truth = gaussian_mixture(seed=0, n=n, dim=16, k=k_true, spread=10.0)
+    with count_distance_queries() as budget:
+        res = landmark_cluster(pts, "ward", metric="sqeuclidean", seed=0)
+    k = default_landmark_count(n)
+    assert budget.queries <= 3 * (n * k + k * k), budget
+    assert budget.queries < n * n, budget
+    exact = dg.canonical_order(
+        np.asarray(nn_chain_from_points(pts, "ward").merges), n=n
+    )
+    agree = dg.cut_label_agreement(res.merges, exact, k_true, n=n)
+    tree = dg.merge_set_agreement(res.merges, exact, n=n)
+    ari = dg.adjusted_rand_index(dg.cut(res.merges, k_true, n=n), truth)
+    assert agree >= 0.95, (agree, tree, ari)
+    assert ari >= 0.95, (agree, tree, ari)
+    # tree-structure agreement is reported, not floored: the tier only
+    # promises the partition at the cut (EXPERIMENTS.md §Perf-10)
+    assert 0.0 <= tree <= 1.0
+
+
+def test_exact_when_every_point_is_a_landmark():
+    n = 96
+    pts, _ = _mixture(seed=4, n=n)
+    res = landmark_cluster(pts, "ward", metric="sqeuclidean",
+                           n_landmarks=n, seed=0)
+    exact = dg.canonical_order(
+        np.asarray(nn_chain_from_points(pts, "ward").merges), n=n
+    )
+    np.testing.assert_array_equal(res.merges, exact)
+
+
+# ---------------------------------------------------------------------------
+# determinism + structure
+# ---------------------------------------------------------------------------
+
+
+def test_seeded_determinism_and_seed_sensitivity():
+    pts, _ = _mixture(seed=5, n=256)
+    a = landmark_cluster(pts, "ward", metric="sqeuclidean", seed=7)
+    b = landmark_cluster(pts, "ward", metric="sqeuclidean", seed=7)
+    np.testing.assert_array_equal(a.merges, b.merges)
+    np.testing.assert_array_equal(a.landmarks, b.landmarks)
+    np.testing.assert_array_equal(a.group_labels, b.group_labels)
+    c = landmark_cluster(pts, "ward", metric="sqeuclidean", seed=8)
+    assert not np.array_equal(a.landmarks, c.landmarks)
+
+
+def test_merges_canonical_and_structurally_valid():
+    for metric, method, data in (
+        ("sqeuclidean", "ward", _mixture(seed=6, n=200)[0]),
+        ("euclidean", "complete", _mixture(seed=6, n=200)[0]),
+        ("cosine", "average", _mixture(seed=6, n=200)[0]),
+    ):
+        res = landmark_cluster(data, method, metric=metric,
+                               n_landmarks=40, seed=0)
+        dg.validate_merges(res.merges, n=200)
+        assert dg.is_monotone(res.merges)
+        assert res.n_merges == 199
+        # landmarks are pinned to their own groups
+        assert np.array_equal(
+            res.group_labels[res.landmarks], np.arange(res.k)
+        )
+
+
+def test_rmsd_conformations_path():
+    C, truth = conformations(0, 48, 12, k=3, noise=0.05)
+    res = landmark_cluster(C, "average", metric="rmsd",
+                           n_landmarks=16, seed=0)
+    dg.validate_merges(res.merges, n=48)
+    labels = dg.cut(res.merges, 3, n=48)
+    assert dg.label_agreement(labels, truth) >= 0.9
+
+
+def test_trivial_sizes():
+    res = landmark_cluster(np.zeros((1, 3), np.float32), "ward")
+    assert res.merges.shape == (0, 4)
+    res = landmark_cluster(np.zeros((0, 3), np.float32), "ward")
+    assert res.merges.shape == (0, 4)
+    # a single landmark: every other point attaches to it
+    pts, _ = _mixture(seed=7, n=32)
+    res = landmark_cluster(pts, "ward", metric="sqeuclidean",
+                           n_landmarks=1, seed=0)
+    assert res.n_merges == 31
+    dg.validate_merges(res.merges, n=32)
+
+
+# ---------------------------------------------------------------------------
+# cluster() API wiring
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_api_landmark():
+    n = 300
+    pts, truth = _mixture(seed=8, n=n)
+    res = cluster(pts, "ward", algorithm="landmark", seed=0)
+    assert res.algorithm == "landmark"
+    assert res.backend == "serial"
+    assert res.distances is None           # never materialized
+    assert dg.adjusted_rand_index(res.labels(6), truth) >= 0.95
+    # stop_at_k truncates the canonical prefix like every other engine
+    stopped = cluster(pts, "ward", algorithm="landmark", seed=0, stop_at_k=6)
+    assert stopped.n_merges == n - 6
+    np.testing.assert_array_equal(stopped.merges, res.merges[: n - 6])
+
+
+def test_cluster_api_landmark_knobs_resolve_auto():
+    pts, _ = _mixture(seed=9, n=64)
+    res = cluster(pts, "ward", n_landmarks=16, seed=0)
+    assert res.algorithm == "landmark"
+    with pytest.raises(ValueError, match="landmark tier"):
+        cluster(pts, "ward", algorithm="lw", n_landmarks=16)
+    with pytest.raises(ValueError, match="landmark tier"):
+        cluster(pts, "ward", algorithm="nnchain", refine=1)
+
+
+def test_cluster_api_landmark_validation():
+    pts, _ = _mixture(seed=10, n=32)
+    D = np.asarray(pairwise_sq_euclidean(pts))
+    with pytest.raises(ValueError, match="pre-built distance matrix"):
+        cluster(D, "ward", algorithm="landmark")
+    with pytest.raises(ValueError, match="single-device"):
+        cluster(pts, "ward", algorithm="landmark", backend="kernel")
+    with pytest.raises(ValueError, match="reducible"):
+        landmark_cluster(pts, "centroid", metric="sqeuclidean")
+    with pytest.raises(ValueError, match="metric"):
+        landmark_cluster(pts, "ward", metric="mahalanobis")
+    with pytest.raises(ValueError, match="refine"):
+        landmark_cluster(pts, "average", metric="cosine", refine=1)
+    with pytest.raises(ValueError, match="1 <= k <= n"):
+        sample_landmarks(8, 9, 0)
+    with pytest.raises(ValueError, match="1 <= k <= n"):
+        sample_landmarks(8, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# service landmark lane
+# ---------------------------------------------------------------------------
+
+
+def test_service_landmark_lane():
+    from repro.service.batcher import ClusteringService, ServiceConfig
+
+    n = 400
+    pts, truth = _mixture(seed=11, n=n)
+    cfg = ServiceConfig(method="ward", algorithm="landmark", landmark_seed=0)
+    with count_distance_queries() as budget:
+        with ClusteringService(cfg) as svc:
+            assert svc.warmup() == 0       # per-request lane: nothing AOT
+            futs = svc.submit_many([pts, pts], metric="sqeuclidean")
+            results = [f.result(timeout=120) for f in futs]
+    for res in results:
+        assert res.algorithm == "landmark"
+        assert res.distances is None
+        dg.validate_merges(res.merges, n=n)
+        assert dg.adjusted_rand_index(res.labels(6), truth) >= 0.95
+    # same config + seed => identical dendrograms, and the worker-side
+    # queries were replayed onto the submitter's budget scope
+    np.testing.assert_array_equal(results[0].merges, results[1].merges)
+    assert budget.queries > 0
+    assert budget.queries < 2 * n * n
+
+
+def test_service_landmark_rejects_matrix_input():
+    from repro.service.batcher import ClusteringService, ServiceConfig
+
+    cfg = ServiceConfig(method="ward", algorithm="landmark")
+    with ClusteringService(cfg) as svc:
+        D = np.zeros((8, 8), np.float32)
+        with pytest.raises(ValueError, match="landmark"):
+            svc.submit(D).result(timeout=30)
+
+
+def test_service_config_landmark_validation():
+    from repro.service.batcher import ServiceConfig
+
+    with pytest.raises(ValueError, match="reducible"):
+        ServiceConfig(method="centroid", algorithm="landmark")
+    with pytest.raises(ValueError, match="supervised worker"):
+        ServiceConfig(method="ward", engine="kernel", algorithm="landmark")
+    with pytest.raises(ValueError, match="landmark lane"):
+        ServiceConfig(method="ward", n_landmarks=32)
+    with pytest.raises(ValueError, match="landmark lane"):
+        ServiceConfig(method="ward", landmark_refine=1)

@@ -35,6 +35,7 @@ def _train_batch(cfg, rng, seq=S):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_train_step_shapes_and_finite(arch, rng):
     cfg = get_config(arch, reduced=True)
@@ -50,6 +51,7 @@ def test_train_step_shapes_and_finite(arch, rng):
     assert abs(float(loss) - np.log(cfg.vocab)) < 1.5
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_decode_consistent_with_full_forward(arch, rng):
     cfg = get_config(arch, reduced=True)

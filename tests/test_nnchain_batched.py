@@ -268,6 +268,7 @@ def test_threshold_boundary_on_mutual_nn_merge(threshold, want_merges):
     np.testing.assert_array_equal(br[0].merges, want.merges)
 
 
+@pytest.mark.slow
 def test_stop_knobs_match_serial_posthoc(rng):
     """stop_at_k / distance_threshold on batched nnchain lanes == the
     serial engine's post-hoc canonical truncation, per lane."""

@@ -73,6 +73,7 @@ def test_zero_recompiles_steady_state(rng):
         )
 
 
+@pytest.mark.slow
 def test_zero_recompiles_compacted_buckets(rng):
     """Warmup must cover the stage schedule: buckets past the first
     boundary resolve ``compaction="auto"`` to a staged executable, and
@@ -106,6 +107,7 @@ def test_zero_recompiles_compacted_buckets(rng):
             np.testing.assert_array_equal(res.merges, want.merges)
 
 
+@pytest.mark.slow
 def test_zero_recompiles_nnchain_buckets(rng):
     """Warmup must cover the matrix-free NN-chain signatures: with
     ``points_dim`` declared, the FIRST nnchain bucket on a warmed
@@ -142,6 +144,7 @@ def test_zero_recompiles_nnchain_buckets(rng):
             assert dg.merges_equivalent(res.merges, want.merges, n=X.shape[0])
 
 
+@pytest.mark.slow
 def test_mixed_lw_nnchain_traffic_no_collisions(rng):
     """LW and nnchain buckets coexisting in ONE micro-batch window must
     dispatch through distinct BucketSignatures (no cache-key collision:
